@@ -1,0 +1,82 @@
+"""Paper Tables 3/4 (BABILong stand-in): needle-QA accuracy + generation
+time with the original sequential ARMT vs Diagonal Batching.
+
+Trains a reduced ARMT on the synthetic needle task with a mixed needle
+region spanning a segment boundary (single-boundary curriculum — the full
+paper setup trains to 8k with curriculum; at CPU scale this demonstrates the
+same thing: retrieval *through the associative memory*, needle in an earlier
+segment than the query). Then evaluates:
+  (a) exact-match accuracy under both schedules — quality must be preserved
+      (paper Table 3),
+  (b) forward wall time sequential vs diagonal (paper Table 4)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.configs import ARMTConfig, get_smoke_config
+from repro.data import needle_qa
+from repro.models import forward_hidden, last_logits
+from repro.optim import OptimConfig
+from repro.train.loop import train_loop
+
+SEG = 32
+
+
+def _cfg():
+    return dataclasses.replace(
+        get_smoke_config("llama-1b-armt"),
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
+        armt=ARMTConfig(segment_len=SEG, num_mem_tokens=8, d_mem=8))
+
+
+def main(quick: bool = True):
+    cfg = _cfg()
+    steps = 600          # below ~500 steps retrieval stays at chance
+    ocfg = OptimConfig(lr=3e-3, total_steps=steps, warmup_steps=10,
+                       weight_decay=0.0)
+    data = needle_qa(cfg.vocab, 32, 4 * SEG, seed=0, n_keys=4,
+                     needle_region=(0.55, 0.95))
+    out = train_loop(cfg, ocfg, data, steps=steps, schedule="sequential")
+    params = out["state"]["params"]
+    row("babilong_train_final_loss", 0.0,
+        f"loss={out['history'][-1]['loss']:.4f};steps={steps}")
+
+    # Table 3: accuracy, same-segment and cross-segment needles, both schedules
+    for region, name in [((0.80, 0.92), "same_seg"), ((0.55, 0.72), "prev_seg")]:
+        test = next(needle_qa(cfg.vocab, 64, 4 * SEG, seed=999, n_keys=4,
+                              needle_region=region))
+        toks = jnp.asarray(test["tokens"])
+        gold = np.asarray(test["answer"])
+        accs = {}
+        for sched in ("sequential", "diagonal"):
+            fwd = jax.jit(lambda p, t, s=sched: last_logits(
+                p, cfg, forward_hidden(p, cfg, t, schedule=s)[0]))
+            pred = np.asarray(jnp.argmax(fwd(params, toks), -1))
+            accs[sched] = float((pred == gold).mean())
+            row(f"babilong_acc_{name}_{sched}", 0.0,
+                f"exact_match={accs[sched]:.3f};chance=0.25")
+        row(f"babilong_quality_{name}", 0.0,
+            f"schedules_agree={abs(accs['sequential'] - accs['diagonal']) < 0.05}")
+
+    # Table 4: generation (forward) time across lengths
+    for n_seg in (4, 8) if quick else (4, 8, 16, 32):
+        L = n_seg * SEG
+        test = next(needle_qa(cfg.vocab, 32, L, seed=123, n_keys=4))
+        toks = jnp.asarray(test["tokens"])
+        ts = {}
+        for sched in ("sequential", "diagonal"):
+            fwd = jax.jit(lambda p, t, s=sched: last_logits(
+                p, cfg, forward_hidden(p, cfg, t, schedule=s)[0]))
+            ts[sched] = timeit(fwd, params, toks, warmup=1, iters=2)
+            row(f"babilong_time_{sched}_L{L}", ts[sched], "")
+        row(f"babilong_speedup_L{L}", 0.0,
+            f"diag_vs_seq={ts['sequential'] / ts['diagonal']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Table 2: relative logits error (Frobenius) between the sequential
+baseline and Diagonal Batching, vs number of segments, in fp32 and bf16.
+The paper reports <= 2% for fp16 CUDA kernels; exact-reordering in JAX gives
+orders of magnitude less."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.configs import get_smoke_config
+from repro.models import forward_hidden, init_params
+from repro.models.layers import norm
+from repro.models.model import _head_matmul
+
+
+def _rel_err(cfg, params, toks):
+    hs, _ = forward_hidden(params, cfg, toks, schedule="sequential")
+    hd, _ = forward_hidden(params, cfg, toks, schedule="diagonal")
+
+    def logits(h):
+        hn = norm(cfg.norm, h, params["final_norm"])
+        return _head_matmul(params, cfg, hn).astype(jnp.float32)
+
+    ls, ld = logits(hs), logits(hd)
+    return float(jnp.linalg.norm(ls - ld) / jnp.linalg.norm(ls))
+
+
+def _trained_params(cfg, steps: int):
+    """The paper measures a *trained* ARMT (random-init recurrences are
+    chaotic and exaggerate reordering drift) — train briefly first."""
+    from repro.data import lm_stream
+    from repro.optim import OptimConfig
+    from repro.train.loop import train_loop
+    ocfg = OptimConfig(lr=3e-3, total_steps=steps, warmup_steps=3)
+    data = lm_stream(cfg.vocab, 4, 4 * cfg.armt.segment_len, seed=0)
+    out = train_loop(cfg, ocfg, data, steps=steps, schedule="sequential")
+    return out["state"]["params"]
+
+
+def main(quick: bool = True):
+    base = get_smoke_config("llama-1b-armt")
+    seg = base.armt.segment_len
+    cfg32 = dataclasses.replace(base, dtype="float32")
+    params = _trained_params(cfg32, 100)   # undertrained recurrences are
+    # chaotic and exaggerate reordering drift (see EXPERIMENTS.md §1.2)
+    for dtype in ("float32", "bfloat16"):
+        cfg = dataclasses.replace(base, dtype=dtype)
+        p = (params if dtype == "float32" else
+             jax.tree_util.tree_map(
+                 lambda x: x.astype(jnp.bfloat16)
+                 if x.dtype == jnp.float32 else x, params))
+        for n_seg in (1, 2, 4, 8, 16, 32):
+            if quick and n_seg > 16:
+                continue
+            toks = jax.random.randint(jax.random.PRNGKey(1),
+                                      (1, n_seg * seg), 8, cfg.vocab)
+            e = _rel_err(cfg, p, toks)
+            row(f"error_accum_{dtype}_seg{n_seg}", 0.0,
+                f"rel_logits_err_pct={e * 100:.5f};paper_bound_pct=2.0")
+
+
+if __name__ == "__main__":
+    main()

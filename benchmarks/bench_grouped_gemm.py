@@ -1,0 +1,43 @@
+"""Paper Fig. 4: grouped GEMM throughput scales with group size like the
+batch-size scaling of a single GEMM.
+
+On TPU the grouped GEMM is one batched einsum (DESIGN.md §2); here we measure
+the same property on the host backend: time-per-group-member falls as the
+group grows, and matches batched-GEMM scaling (the foundation of the diagonal
+batching speedup)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+
+
+def main(quick: bool = True):
+    M = K = N = 256 if quick else 1024
+    key = jax.random.PRNGKey(0)
+    grouped = jax.jit(lambda x, w: jnp.einsum("gmk,gkn->gmn", x, w))
+    single = jax.jit(lambda x, w: x @ w)
+
+    t1 = timeit(single, jax.random.normal(key, (M, K)),
+                jax.random.normal(key, (K, N)))
+    flops = 2 * M * K * N
+    row("gemm_single_g1", t1, f"gflops={flops / t1 / 1e9:.2f}")
+
+    for g in (1, 2, 4, 8, 16):
+        x = jax.random.normal(key, (g, M, K))
+        w = jax.random.normal(key, (g, K, N))
+        tg = timeit(grouped, x, w)
+        per = tg / g
+        row(f"grouped_gemm_g{g}", per,
+            f"gflops={flops / per / 1e9:.2f};rel_eff_vs_g1={t1 / per:.2f}")
+
+        # batched-GEMM equivalent (one weight, batch g) — Fig 4's comparison
+        xb = jax.random.normal(key, (g, M, K))
+        wb = jax.random.normal(key, (K, N))
+        tb = timeit(jax.jit(lambda a, b: a @ b), xb, wb) / g
+        row(f"batched_gemm_b{g}", tb, f"gflops={flops / tb / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    main()

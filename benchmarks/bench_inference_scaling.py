@@ -1,0 +1,53 @@
+"""Paper Tables 1/5/6/7: end-to-end forward time across sequence lengths —
+full-attention baseline vs sequential ARMT vs Diagonal Batching ARMT.
+
+CPU-scaled model (the paper's trend, not its absolute numbers): linear-time
+ARMT overtakes the quadratic full-attention model as length grows, and the
+diagonal schedule beats the sequential one once n_segments is large."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.configs import ARMTConfig, get_smoke_config
+from repro.models import forward_hidden, init_params
+
+
+def bench_model(quick: bool = True):
+    cfg = get_smoke_config("llama-1b-armt")
+    seg = 128
+    cfg = dataclasses.replace(
+        cfg, n_layers=8, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+        d_ff=128, max_position=1 << 16,
+        armt=ARMTConfig(segment_len=seg, num_mem_tokens=8, d_mem=8))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    lengths = (512, 1024, 2048, 4096) if quick else (1024, 4096, 16384, 65536)
+
+    fwd_full = jax.jit(lambda p, t: forward_hidden(p, cfg, t, mode="full")[0])
+    fwd_seq = jax.jit(lambda p, t: forward_hidden(
+        p, cfg, t, schedule="sequential")[0])
+    fwd_diag = jax.jit(lambda p, t: forward_hidden(
+        p, cfg, t, schedule="diagonal")[0])
+
+    for L in lengths:
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, L), 8, cfg.vocab)
+        t_full = timeit(fwd_full, params, toks, warmup=1, iters=2)
+        t_seq = timeit(fwd_seq, params, toks, warmup=1, iters=2)
+        t_diag = timeit(fwd_diag, params, toks, warmup=1, iters=2)
+        row(f"full_attn_L{L}", t_full, "")
+        row(f"armt_sequential_L{L}", t_seq,
+            f"vs_full={t_full / t_seq:.2f}x")
+        row(f"armt_diagonal_L{L}", t_diag,
+            f"vs_seq={t_seq / t_diag:.2f}x;vs_full={t_full / t_diag:.2f}x;"
+            f"segments={L // 128}")
+
+
+def main(quick: bool = True):
+    bench_model(quick)
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,38 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape x
+mesh) roofline table — the three terms, dominant bottleneck, useful-FLOPs
+ratio and roofline fraction."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+ART = Path("artifacts/dryrun")
+
+
+def main(quick: bool = True):
+    files = sorted(ART.glob("*.json"))
+    if not files:
+        row("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        return
+    n_ok = 0
+    for f in files:
+        r = json.loads(f.read_text())
+        name = f"{r['arch']}|{r['shape']}|{r['mesh']}{r.get('tag', '')}"
+        if not r.get("ok"):
+            row(f"roofline_{name}", 0.0, "FAILED")
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        dom_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        row(f"roofline_{name}", dom_s,
+            f"comp={rf['compute_s']:.3e};mem={rf['memory_s']:.3e};"
+            f"coll={rf['collective_s']:.3e};dom={rf['dominant']};"
+            f"useful={rf['useful_ratio']:.3f};"
+            f"frac={rf['roofline_fraction']:.4f}")
+    row("roofline_cells_ok", 0.0, f"count={n_ok}/{len(files)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Render the EXPERIMENTS.md roofline tables from artifacts/dryrun/*.json."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES
+
+ART = Path("artifacts/dryrun")
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}e}"
+
+
+def load(mesh: str, tag: str = ""):
+    out = {}
+    for f in ART.glob(f"*__{mesh}{tag}.json"):
+        r = json.loads(f.read_text())
+        if r.get("tag", "") != tag:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def table(mesh: str, tag: str = "", file=sys.stdout):
+    rows = load(mesh, tag)
+    print(f"\n### Mesh {mesh}{(' [' + tag + ']') if tag else ''}", file=file)
+    print("| arch | shape | sched/mode | compute s | memory s | collective s "
+          "| dominant | MODEL_FLOPs | useful | roofline frac | mem/dev |",
+          file=file)
+    print("|---|---|---|---|---|---|---|---|---|---|---|", file=file)
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            r = rows.get((arch, shape))
+            if r is None:
+                continue
+            if not r["ok"]:
+                print(f"| {arch} | {shape} | — | FAILED ({r.get('error','')[:40]}) "
+                      "| | | | | | | |", file=file)
+                continue
+            rf = r["roofline"]
+            meta = r.get("meta", {})
+            sched = meta.get("schedule") or meta.get("serve_mode", "")
+            mem = r.get("memory", {}) or {}
+            mem_dev = sum(v for k, v in mem.items()
+                          if isinstance(v, (int, float)) and k != "generated_code_bytes")
+            print(f"| {arch} | {shape} | {sched} | {fmt(rf['compute_s'])} "
+                  f"| {fmt(rf['memory_s'])} | {fmt(rf['collective_s'])} "
+                  f"| **{rf['dominant']}** | {fmt(rf['model_flops'], 2)} "
+                  f"| {rf['useful_ratio']:.2f} | {rf['roofline_fraction']:.4f} "
+                  f"| {mem_dev / 2**30:.1f}GiB |", file=file)
+
+
+if __name__ == "__main__":
+    tag = sys.argv[1] if len(sys.argv) > 1 else ""
+    table("16x16", tag)
+    table("2x16x16", tag)

@@ -1,0 +1,41 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  Fig. 4   bench_grouped_gemm       grouped GEMM group-size scaling
+  Fig. 5   bench_attention          attention group-as-batch scaling
+  Tab. 1/5/6/7 bench_inference_scaling  full vs sequential vs diagonal
+  Tab. 2   bench_error_accumulation logits drift vs segments (fp32/bf16)
+  Tab. 3/4 bench_babilong           needle-QA accuracy + speed
+  §Roofline bench_roofline          dry-run artifact aggregation
+
+``QUICK=0 python -m benchmarks.run`` for full sizes.
+"""
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    quick = os.environ.get("QUICK", "1") != "0"
+    import benchmarks.bench_grouped_gemm as g
+    import benchmarks.bench_attention as a
+    import benchmarks.bench_inference_scaling as i
+    import benchmarks.bench_error_accumulation as e
+    import benchmarks.bench_babilong as b
+    import benchmarks.bench_roofline as r
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (g, a, i, e, b, r):
+        try:
+            mod.main(quick=quick)
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},0.0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end serving driver (the paper's deployment scenario): batched
+long-context requests served with diagonal-batching prefill and
+constant-memory ARMT decode.
+
+Compares, on the same model:
+  * sequential vs diagonal prefill wall time (paper Tables 1/9)
+  * ARMT decode state size vs an equivalent full-attention KV cache
+    (paper Fig. 1: 167x memory saving at 128k)
+
+    PYTHONPATH=src python examples/long_context_inference.py [--long]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARMTConfig, get_smoke_config
+from repro.models import decode_state_init, init_params
+from repro.serve import ServeEngine
+from repro.utils import fmt_bytes, tree_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--long", action="store_true",
+                    help="16k-token prompts (slower)")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    seg = 128
+    cfg = dataclasses.replace(
+        get_smoke_config("llama-1b-armt"),
+        n_layers=8, d_model=64, n_heads=4, n_kv_heads=4, d_head=16, d_ff=128,
+        max_position=1 << 17,
+        armt=ARMTConfig(segment_len=seg, num_mem_tokens=8, d_mem=8))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    P = (16384 if args.long else 4096)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, P),
+                                 8, cfg.vocab)
+    print(f"model: {cfg.n_layers}L d={cfg.d_model}; prompt {P} tokens "
+          f"({P // seg} segments of {seg}); batch {args.batch}")
+
+    for sched in ("sequential", "diagonal"):
+        eng = ServeEngine(params, cfg, serve_mode="armt", schedule=sched,
+                          max_len=P + args.max_new)
+        t0 = time.perf_counter()
+        res = eng.generate(prompts, args.max_new)
+        dt = time.perf_counter() - t0
+        print(f"  {sched:10s} prefill+decode: {dt:7.2f}s "
+              f"tokens={res.tokens.shape}")
+
+    # memory: ARMT state vs full-attention KV cache at this context length
+    armt_state = jax.eval_shape(lambda: decode_state_init(
+        cfg, args.batch, serve_mode="armt", max_len=P, dtype=jnp.float32))
+    kv_state = jax.eval_shape(lambda: decode_state_init(
+        cfg, args.batch, serve_mode="cache", max_len=P, dtype=jnp.float32))
+    a, k = tree_bytes(armt_state), tree_bytes(kv_state)
+    print(f"decode state: ARMT {fmt_bytes(a)} vs full KV {fmt_bytes(k)} "
+          f"({k / a:.1f}x saving; grows with context for KV, constant for ARMT)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: build a small ARMT, run both schedules, verify they agree,
+train a few steps, generate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARMTConfig, get_smoke_config
+from repro.data import lm_stream
+from repro.models import forward_hidden, init_params
+from repro.optim import OptimConfig
+from repro.serve import ServeEngine
+from repro.train.loop import train_loop
+
+
+def main():
+    # 1. a small ARMT (same family as the paper's Llama-ARMT)
+    cfg = dataclasses.replace(
+        get_smoke_config("llama-1b-armt"),
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
+        armt=ARMTConfig(segment_len=32, num_mem_tokens=8, d_mem=8))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 8, cfg.vocab)
+
+    # 2. the paper's claim: diagonal batching is a pure reordering
+    h_seq, _ = forward_hidden(params, cfg, toks, schedule="sequential")
+    h_diag, _ = forward_hidden(params, cfg, toks, schedule="diagonal")
+    print(f"schedules agree: max|Δ| = {float(jnp.abs(h_seq - h_diag).max()):.2e}")
+
+    # 3. train a few steps (fault-tolerant loop, NaN-skip, AdamW)
+    ocfg = OptimConfig(lr=3e-3, total_steps=20, warmup_steps=2)
+    out = train_loop(cfg, ocfg, lm_stream(cfg.vocab, 4, 128), steps=20,
+                     schedule="auto")
+    print(f"loss: {out['history'][0]['loss']:.3f} -> "
+          f"{out['history'][-1]['loss']:.3f}")
+
+    # 4. serve: diagonal prefill + constant-memory ARMT decode
+    eng = ServeEngine(out["state"]["params"], cfg, serve_mode="armt",
+                      schedule="diagonal", max_len=256)
+    res = eng.generate(toks, max_new=8)
+    print(f"generated {res.tokens.shape} tokens "
+          f"(prefill segments: {res.prefill_segments})")
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

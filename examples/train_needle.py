@@ -1,0 +1,73 @@
+"""End-to-end training driver: train an ARMT on needle-QA so that retrieval
+crosses a segment boundary (only solvable through the associative memory),
+with checkpointing + resume, then evaluate exact-match accuracy under both
+schedules.
+
+    PYTHONPATH=src python examples/train_needle.py [--steps 600]
+At --full-scale the config is a ~100M-parameter Llama-ARMT (for real
+accelerators; the default runs on CPU in minutes).
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARMTConfig, get_config, get_smoke_config
+from repro.data import needle_qa
+from repro.models import forward_hidden, last_logits
+from repro.optim import OptimConfig
+from repro.train.loop import train_loop
+
+SEG = 32
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_needle_ckpt")
+    ap.add_argument("--full-scale", action="store_true",
+                    help="~100M-param config (accelerator recommended)")
+    args = ap.parse_args()
+
+    if args.full_scale:
+        cfg = get_config("llama-160m-armt")     # ~160M, the paper's smallest
+        seg = cfg.armt.segment_len
+    else:
+        cfg = dataclasses.replace(
+            get_smoke_config("llama-1b-armt"),
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+            d_ff=128, armt=ARMTConfig(segment_len=SEG, num_mem_tokens=8,
+                                      d_mem=8))
+        seg = SEG
+
+    ocfg = OptimConfig(lr=3e-3, total_steps=args.steps, warmup_steps=10,
+                       weight_decay=0.0)
+    data = needle_qa(cfg.vocab, 32, 4 * seg, seed=0, n_keys=4,
+                     needle_region=(0.55, 0.95))
+
+    def log(m):
+        print(f"step {m['step']:4d} loss {m['loss']:.4f}", flush=True)
+
+    out = train_loop(cfg, ocfg, data, steps=args.steps,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                     schedule="sequential", log_fn=log, log_every=50)
+    params = out["state"]["params"]
+
+    print("\nexact-match accuracy (chance = 0.25):")
+    for region, name in [((0.80, 0.92), "needle in query segment"),
+                         ((0.55, 0.72), "needle in PREVIOUS segment")]:
+        test = next(needle_qa(cfg.vocab, 64, 4 * seg, seed=999, n_keys=4,
+                              needle_region=region))
+        toks = jnp.asarray(test["tokens"])
+        for sched in ("sequential", "diagonal"):
+            logits = last_logits(params, cfg, forward_hidden(
+                params, cfg, toks, schedule=sched)[0])
+            acc = float((np.asarray(jnp.argmax(logits, -1))
+                         == test["answer"]).mean())
+            print(f"  {name:30s} {sched:10s}: {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Fault-tolerant checkpointing: atomic, keep-k, async, hash-verified,
+elastic (resharding happens at restore via device_put with any mesh).
+
+Layout:  <dir>/step_<n>/manifest.json + leaf_<i>.npy
+Writes go to <dir>/.tmp_step_<n> then os.rename (atomic on POSIX), so a crash
+mid-save never corrupts the latest checkpoint. ``restore`` verifies per-leaf
+sha256 (truncated) recorded in the manifest.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _hash(a: np.ndarray) -> str:
+    return hashlib.sha256(a.tobytes()).hexdigest()[:16]
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+class CheckpointManager:
+    def __init__(self, directory, *, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, *, block: bool = False) -> None:
+        # pull to host before handing to the writer thread
+        leaves_p = jax.tree_util.tree_flatten_with_path(tree)[0]
+        host = [(_path_str(p), np.asarray(jax.device_get(l)))
+                for p, l in leaves_p]
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host) -> None:
+        tmp = self.dir / f".tmp_step_{step}"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "time": time.time(), "leaves": []}
+        for i, (name, arr) in enumerate(host):
+            np.save(tmp / f"leaf_{i}.npy", arr)
+            manifest["leaves"].append(
+                {"i": i, "path": name, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype), "sha": _hash(arr)})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None, *,
+                shardings: Any = None, verify: bool = True) -> Any:
+        """Restore into the structure of `like` (a pytree or shape tree).
+        `shardings` (same structure) reshards onto any mesh — elastic
+        restart on a different topology."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        arrays = []
+        for leaf in manifest["leaves"]:
+            arr = np.load(d / f"leaf_{leaf['i']}.npy")
+            if verify and _hash(arr) != leaf["sha"]:
+                raise IOError(f"checkpoint corruption at {leaf['path']}")
+            arrays.append(arr)
+        treedef = jax.tree_util.tree_structure(like)
+        assert treedef.num_leaves == len(arrays), \
+            f"checkpoint has {len(arrays)} leaves, expected {treedef.num_leaves}"
+        tree = jax.tree_util.tree_unflatten(treedef, arrays)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree

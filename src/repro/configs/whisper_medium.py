@@ -1,0 +1,31 @@
+"""whisper-medium — encoder-decoder with conv frontend (stubbed).
+
+[audio] 24L d_model=1024 16H (GQA kv=16) d_ff=4096 vocab=51865
+[arXiv:2212.04356; unverified]
+
+Backbone only per assignment: the conv frontend is a STUB — input_specs()
+provides precomputed frame embeddings (B, 1500, d_model). Decoder layers are
+ARMT-wrapped for long-context shapes; the encoder is non-recurrent (processes
+all frames at once), so diagonal batching is N/A there by construction
+(DESIGN.md §Arch-applicability).
+"""
+from repro.configs import ArchConfig, ARMTConfig, EncoderConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,            # decoder layers; encoder below
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,          # MHA
+    d_head=64,
+    d_ff=4096,
+    vocab=51865,
+    block_pattern=("dec",),  # decoder block: self-attn + cross-attn + mlp
+    norm="layernorm",
+    act="gelu",
+    use_rope=False,          # whisper uses learned positional embeddings
+    encoder=EncoderConfig(n_layers=24, n_frames=1500),
+    armt=ARMTConfig(segment_len=1024, num_mem_tokens=128, d_mem=64),
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,147 @@
+"""Diagonal-batching executor (the paper's contribution, paper Alg. 1).
+
+Carries a slot buffer ``buf[L, B, T, D]`` with the invariant *slot l holds the
+segment currently entering layer l*. Each scan step executes one anti-diagonal:
+every slot advances one layer via a single grouped (vmapped) application per
+pattern position — the TPU analogue of the paper's CUTLASS GroupedGEMM +
+batched-attention launch — then the buffer shifts down one slot.
+
+S + L - 1 steps total (minimal, Lemma 3.1); recurrence is exact: per-layer
+states are updated by the same functions in the same order as the sequential
+executor, only grouped across slots.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import StackLayout
+
+ApplyBlock = Callable[[str, Any, jax.Array, Any], tuple]
+
+
+def _mask_state(valid, new, old):
+    """Keep old state where the slot was invalid (pipeline fill/drain)."""
+    def sel(n, o):
+        v = valid.reshape(valid.shape + (1,) * (n.ndim - valid.ndim))
+        return jnp.where(v, n, o)
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
+                 segments: jax.Array, apply_block: ApplyBlock,
+                 *, remat: bool = False, buf_spec=None):
+    """segments: [S, B, T, D] -> (ys [S, B, T, D], final_state).
+
+    Same params/state structure as run_sequential — the two executors are
+    interchangeable (that is the point of the paper: pure reordering).
+
+    buf_spec: optional PartitionSpec for the slot buffer [L, B, T, D]. With
+    the slot dim sharded over a mesh axis ('stage'), diagonal batching
+    *becomes pipeline parallelism*: every stage applies its own layers with
+    fully local weights and the shift lowers to one collective-permute per
+    step — no per-layer tensor-parallel all-reduces (EXPERIMENTS.md §Perf).
+    """
+    S = segments.shape[0]
+    L = layout.n_layers
+    P = len(layout.pattern)
+    n_steps = S + L - 1
+    n_pre = len(layout.prelude)
+
+    pad = jnp.zeros((L - 1,) + segments.shape[1:], segments.dtype)
+    xs_seg = jnp.concatenate([segments, pad], axis=0) if L > 1 else segments
+    slot_ids = jnp.arange(L)
+
+    pos_slots = [np.asarray(layout.position_slots(p)) for p in range(P)]
+
+    def _constrain(b):
+        if buf_spec is not None:
+            return jax.lax.with_sharding_constraint(b, buf_spec)
+        return b
+
+    slot_axis = buf_spec[0] if buf_spec is not None else None
+    batch_axis = (buf_spec[1] if buf_spec is not None and len(buf_spec) > 1
+                  else None)
+
+    def _constrain_states(pattern_states):
+        """Pin per-layer recurrent state (A/z/h/conv) to the slot sharding —
+        otherwise GSPMD re-gathers the stage-sharded activations every step.
+        State layout is [n_super, B, ...]: slot axis on dim 0, the buffer's
+        batch axis on dim 1."""
+        if slot_axis is None:
+            return pattern_states
+        from jax.sharding import PartitionSpec as PS
+
+        def one(leaf):
+            rest = [None] * (leaf.ndim - 1)
+            if leaf.ndim >= 2 and batch_axis is not None:
+                rest[0] = batch_axis
+            return jax.lax.with_sharding_constraint(
+                leaf, PS(slot_axis, *rest))
+        return tuple(jax.tree_util.tree_map(one, st) for st in pattern_states)
+
+    def diag_step(carry, xs):
+        buf, states = carry
+        seg_in, i = xs
+        # insert the new segment into slot 0 with an elementwise select (an
+        # indexed write would re-layout the stage-sharded slot dim — the
+        # select is local on every shard; seg_in is replicated over 'stage')
+        is0 = (slot_ids == 0)[(...,) + (None,) * (buf.ndim - 1)]
+        buf = _constrain(jnp.where(is0, seg_in[None].astype(buf.dtype), buf))
+        # slot l holds segment i - l; valid iff 0 <= i - l < S
+        valid = (i >= slot_ids) & (i - slot_ids < S)                     # [L]
+        buf = buf * valid[(...,) + (None,) * (buf.ndim - 1)].astype(buf.dtype)
+
+        y = jnp.zeros_like(buf)
+        new_prelude = []
+        for j, t in enumerate(layout.prelude):
+            yj, stj = apply_block(t, params["prelude"][j], buf[j],
+                                  states["prelude"][j])
+            y = y.at[j].set(yj)
+            new_prelude.append(_mask_state(valid[j], stj, states["prelude"][j]))
+
+        new_pattern = []
+        for p, t in enumerate(layout.pattern):
+            slots = pos_slots[p]
+            contiguous = P == 1          # slots are base..base+n_super-1
+            if contiguous:
+                # plain slice: SPMD-transparent (a fancy-indexed gather would
+                # all-gather the stage-sharded buffer every step)
+                xp = jax.lax.slice_in_dim(buf, int(slots[0]),
+                                          int(slots[0]) + len(slots), axis=0)
+            else:
+                xp = buf[slots]                               # [n_super, B, T, D]
+            grouped = jax.vmap(
+                lambda pp, xx, ss, _t=t: apply_block(_t, pp, xx, ss))
+            yp, stp = grouped(params["pattern"][p], xp, states["pattern"][p])
+            if contiguous:
+                y = jax.lax.dynamic_update_slice_in_dim(
+                    y, yp.astype(y.dtype), int(slots[0]), axis=0)
+            else:
+                y = y.at[slots].set(yp)
+            new_pattern.append(
+                _mask_state(valid[slots], stp, states["pattern"][p]))
+        new_pattern = _constrain_states(tuple(new_pattern))
+
+        out = y[L - 1]                      # segment i-(L-1) finished all layers
+        y = _constrain(y)
+        # shift as a roll: on a stage-sharded slot dim this lowers to ONE
+        # boundary collective-permute instead of an all-gather of the buffer
+        buf_next = jnp.roll(y, shift=1, axis=0)
+        is0 = (slot_ids == 0)[(...,) + (None,) * (y.ndim - 1)]
+        buf_next = _constrain(jnp.where(is0, jnp.zeros_like(buf_next),
+                                        buf_next))
+        new_states = {"prelude": tuple(new_prelude), "pattern": tuple(new_pattern)}
+        return (buf_next, new_states), out
+
+    step_fn = jax.checkpoint(diag_step) if remat else diag_step
+
+    buf0 = _constrain(jnp.zeros((L,) + segments.shape[1:], segments.dtype))
+    state0 = dict(state0,
+                  pattern=_constrain_states(tuple(state0["pattern"])))
+    (_, final_state), ys = jax.lax.scan(
+        step_fn, (buf0, state0), (xs_seg, jnp.arange(n_steps)))
+    return ys[L - 1:], final_state

@@ -1,0 +1,82 @@
+"""Original RMT (Bulatov et al. 2022) — the paper's Fig. 2 (left) contrast.
+
+Memory is a sequence of token *embeddings* carried from the FINAL layer's
+output of segment s-1 into the INPUT of segment s (eq. 1):
+
+    [_, _, M_s] = Transformer([M_{s-1}, H_s, M_{s-1}])
+
+so cell (s, l) depends on (s-1, L-1) — an inter-layer dependency that makes
+the diagonal schedule inapplicable (paper Limitation 1). We implement RMT as
+a baseline to *demonstrate* that claim: `rmt_dependencies` is checked against
+the diagonal grouping in tests (it violates the DAG), and `run_rmt` only has
+a sequential executor.
+
+Layout per segment: [read_mem (M), tokens (T), write_mem (M)]; the write
+positions' final-layer outputs become the next segment's read/write memory.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import StackLayout
+
+
+def rmt_dependencies(s: int, l: int, n_layers: int) -> List[Tuple[int, int]]:
+    """Dependencies of cell (s, l) in the ORIGINAL RMT: within-segment
+    layer chain + the final layer of the previous segment (global memory)."""
+    deps = []
+    if l > 0:
+        deps.append((s, l - 1))
+    if s > 0:
+        deps.append((s - 1, n_layers - 1))   # memory from the LAST layer
+    return deps
+
+
+def diagonal_violates_rmt(n_segments: int, n_layers: int) -> bool:
+    """True iff the diagonal grouping breaks an RMT dependency (it always
+    does for L >= 2: cell (s, 0) sits in group s but needs (s-1, L-1) from
+    group s-1+L-1 > s-1 ... which for L >= 2 is >= s)."""
+    from repro.core.schedule import diagonal_groups
+    groups = diagonal_groups(n_segments, n_layers)
+    level = {}
+    for gi, g in enumerate(groups):
+        for cell in g:
+            level[cell] = gi
+    for s in range(n_segments):
+        for l in range(n_layers):
+            for dep in rmt_dependencies(s, l, n_layers):
+                if level[dep] >= level[(s, l)]:
+                    return True
+    return False
+
+
+def run_rmt(layout: StackLayout, params, mem0: jax.Array,
+            segments: jax.Array, apply_block: Callable,
+            *, remat: bool = False):
+    """segments: [S, B, T, D]; mem0: [B, M, D] initial memory embeddings.
+    Returns (ys [S, B, T, D], final_mem [B, M, D]).
+
+    apply_block(btype, p, x, state) is the same closure the PRMT executors
+    use, with empty per-layer state (RMT memory is global, carried here)."""
+    M = mem0.shape[1]
+
+    def seg_step(mem, x_tokens):
+        x = jnp.concatenate([mem, x_tokens, mem], axis=1)   # [B, M+T+M, D]
+        for j, t in enumerate(layout.prelude):
+            x, _ = apply_block(t, params["prelude"][j], x, {})
+        P = len(layout.pattern)
+        if P:
+            def sb(xc, sb_params):
+                for p, t in enumerate(layout.pattern):
+                    xc, _ = apply_block(t, sb_params[p], xc, {})
+                return xc, None
+            sb_fn = jax.checkpoint(sb) if remat else sb
+            x, _ = jax.lax.scan(sb_fn, x, params["pattern"])
+        new_mem = x[:, -M:, :]                 # write positions, final layer
+        return new_mem, x[:, M:-M, :]
+
+    final_mem, ys = jax.lax.scan(seg_step, mem0, segments)
+    return ys, final_mem

@@ -1,0 +1,99 @@
+"""Diagonal-batching schedule as data + the layer-stack layout.
+
+The (segment s, layer l) grid has edges (s,l-1)->(s,l) and (s-1,l)->(s,l)
+(layer-local recurrence — PRMT assumption). Diagonal batching executes group
+i = { (s,l) : s+l = i }, i = 0..S+L-2, which is minimal (paper Lemma 3.1).
+
+``StackLayout`` describes a heterogeneous layer stack (prelude + repeated
+pattern) and gives the static slot-index bookkeeping both executors share.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Pure schedule (for tests / Lemma 3.1 / docs)
+# ---------------------------------------------------------------------------
+
+def diagonal_groups(n_segments: int, n_layers: int) -> List[List[Tuple[int, int]]]:
+    """Groups of (segment, layer) cells; group i holds cells with s+l == i."""
+    groups: List[List[Tuple[int, int]]] = [[] for _ in range(n_segments + n_layers - 1)]
+    for s in range(n_segments):
+        for l in range(n_layers):
+            groups[s + l].append((s, l))
+    return groups
+
+
+def cell_dependencies(s: int, l: int) -> List[Tuple[int, int]]:
+    deps = []
+    if l > 0:
+        deps.append((s, l - 1))
+    if s > 0:
+        deps.append((s - 1, l))
+    return deps
+
+
+def validate_schedule(groups: List[List[Tuple[int, int]]],
+                      n_segments: int, n_layers: int) -> None:
+    """Checks a schedule is a valid topological grouping covering every cell."""
+    seen = {}
+    for gi, group in enumerate(groups):
+        for cell in group:
+            assert cell not in seen, f"cell {cell} scheduled twice"
+            seen[cell] = gi
+    assert len(seen) == n_segments * n_layers, "schedule does not cover the grid"
+    for (s, l), gi in seen.items():
+        for dep in cell_dependencies(s, l):
+            assert seen[dep] < gi, f"dependency {dep} of {(s, l)} not satisfied"
+
+
+def is_minimal(groups, n_segments: int, n_layers: int) -> bool:
+    """Lemma 3.1: minimum group count is S+L-1 and each cell sits at s+l."""
+    if len([g for g in groups if g]) != n_segments + n_layers - 1:
+        return False
+    for gi, group in enumerate(groups):
+        for (s, l) in group:
+            if s + l != gi:
+                return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Stack layout
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StackLayout:
+    """prelude layers (individual) followed by `pattern` repeated n_super times.
+
+    Slot l of the diagonal buffer always holds the segment currently entering
+    layer l — so slot -> layer-type is static, and grouped application per
+    pattern position is a vmap over its n_super stacked layers.
+    """
+    prelude: Tuple[str, ...]
+    pattern: Tuple[str, ...]
+    n_super: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.prelude) + len(self.pattern) * self.n_super
+
+    @property
+    def layer_types(self) -> Tuple[str, ...]:
+        return tuple(self.prelude) + tuple(self.pattern) * self.n_super
+
+    def position_slots(self, p: int) -> np.ndarray:
+        """Global slot indices of pattern position p across superblocks."""
+        base = len(self.prelude)
+        P = len(self.pattern)
+        return base + p + P * np.arange(self.n_super)
+
+    @staticmethod
+    def from_config(cfg) -> "StackLayout":
+        return StackLayout(prelude=tuple(cfg.prelude),
+                           pattern=tuple(cfg.block_pattern),
+                           n_super=cfg.n_superblocks)

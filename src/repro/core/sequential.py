@@ -1,0 +1,56 @@
+"""Sequential PRMT executor — the paper's baseline schedule.
+
+Processes segments strictly in order; within a segment, layers run in order
+(scan over superblocks, static loop over the pattern). This is the
+``n_segments x n_layers`` serialized schedule of paper Fig. 3a.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import StackLayout
+
+# apply_block(btype, layer_params, x, layer_state) -> (y, new_layer_state)
+ApplyBlock = Callable[[str, Any, jax.Array, Any], tuple]
+
+
+def run_sequential(layout: StackLayout, params: Dict, state0: Dict,
+                   segments: jax.Array, apply_block: ApplyBlock,
+                   *, remat: bool = False):
+    """segments: [S, B, T, D] -> (ys [S, B, T, D], final_state).
+
+    params/state structure:
+      {'prelude': tuple(len n_prelude) of per-layer pytrees,
+       'pattern': tuple(len P) of pytrees stacked over n_super on axis 0}
+    """
+    P = len(layout.pattern)
+
+    def superblock(x, sb):
+        sb_params, sb_state = sb
+        new_states = []
+        for p, t in enumerate(layout.pattern):
+            x, st = apply_block(t, sb_params[p], x, sb_state[p])
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    sb_fn = jax.checkpoint(superblock) if remat else superblock
+
+    def seg_step(states, x):
+        new_prelude = []
+        for j, t in enumerate(layout.prelude):
+            x, st = apply_block(t, params["prelude"][j], x, states["prelude"][j])
+            new_prelude.append(st)
+        if P:
+            def scan_body(carry_x, sb):
+                return sb_fn(carry_x, sb)
+            x, new_pattern = jax.lax.scan(
+                scan_body, x, (params["pattern"], states["pattern"]))
+        else:
+            new_pattern = states["pattern"]
+        return {"prelude": tuple(new_prelude), "pattern": new_pattern}, x
+
+    final_state, ys = jax.lax.scan(seg_step, state0, segments)
+    return ys, final_state

@@ -1,0 +1,2 @@
+from repro.data.synthetic import lm_stream, needle_qa, N_RESERVED, ANSWER
+from repro.data.loader import shard_batch

@@ -1,0 +1,21 @@
+"""Device placement of host batches: shard over the mesh DP axes."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.parallel import sharding as shd
+
+
+def shard_batch(batch: Dict[str, np.ndarray], mesh=None):
+    if mesh is None:
+        return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    out = {}
+    for k, v in batch.items():
+        ax = shd.batch_axes(mesh, v.shape[0])
+        ns = NamedSharding(mesh, P(ax, *([None] * (v.ndim - 1))))
+        out[k] = jax.device_put(v, ns)
+    return out

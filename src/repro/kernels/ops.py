@@ -1,0 +1,84 @@
+"""Jit'd dispatch wrappers: pick the Pallas kernel on TPU, the jnp oracle on
+CPU (or interpret=True for kernel validation), with MXU-alignment padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.armt_memory import armt_read, armt_update
+from repro.kernels.mamba_scan import mamba_scan
+from repro.utils import round_up
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x, axis: int, to: int):
+    pad = round_up(x.shape[axis], to) - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def segment_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      use_kernel: bool | None = None,
+                      interpret: bool | None = None):
+    """Grouped attention with automatic 128-lane head-dim padding.
+    q: [N,Hq,T,hd]; k/v: [N,Hkv,S,hd]."""
+    use_kernel = on_tpu() if use_kernel is None else use_kernel
+    if not use_kernel:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    hd = q.shape[-1]
+    hd_p = round_up(hd, 128)
+    if hd_p != hd:
+        # zero-pad head dim; scale is computed from the true hd inside ref,
+        # so rescale q to keep softmax temperature identical
+        scale_fix = (hd_p / hd) ** 0.5
+        q = _pad_axis(q * scale_fix, -1, 128)
+        k = _pad_axis(k, -1, 128)
+        v = _pad_axis(v, -1, 128)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=bool(interpret))
+    return out[..., :hd]
+
+
+def grouped_gemm(x, w, *, use_kernel: bool | None = None,
+                 interpret: bool | None = None):
+    use_kernel = on_tpu() if use_kernel is None else use_kernel
+    if not use_kernel:
+        return ref.grouped_matmul_ref(x, w)
+    return grouped_matmul(x, w, interpret=bool(interpret))
+
+
+def assoc_read(x, wq, A, z, *, nu: int = 3, use_kernel: bool | None = None,
+               interpret: bool | None = None):
+    use_kernel = on_tpu() if use_kernel is None else use_kernel
+    if not use_kernel:
+        return ref.armt_read_ref(x, wq, A, z, nu=nu)
+    return armt_read(x, wq, A, z, nu=nu, interpret=bool(interpret))
+
+
+def assoc_update(m, wk, wv, wb, A, z, *, nu: int = 3,
+                 use_kernel: bool | None = None,
+                 interpret: bool | None = None):
+    use_kernel = on_tpu() if use_kernel is None else use_kernel
+    if not use_kernel:
+        return ref.armt_update_ref(m, wk, wv, wb, A, z, nu=nu)
+    return armt_update(m, wk, wv, wb, A, z, nu=nu, interpret=bool(interpret))
+
+
+def selective_scan_fused(x, dt, Bt, Ct, A_log, D, h0, *,
+                         use_kernel: bool | None = None,
+                         interpret: bool | None = None):
+    use_kernel = on_tpu() if use_kernel is None else use_kernel
+    if not use_kernel:
+        return ref.mamba_scan_ref(x, dt, Bt, Ct, A_log, D, h0)
+    return mamba_scan(x, dt, Bt, Ct, A_log, D, h0, interpret=bool(interpret))

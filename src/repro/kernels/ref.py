@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.memory import dpfp
+
+EPS = 1e-6
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [N,Hq,T,hd]; k/v: [N,Hkv,S,hd] -> [N,Hq,T,hd], fp32 softmax."""
+    N, Hq, T, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("nhtd,nhsd->nhts", q, k).astype(jnp.float32) * hd ** -0.5
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > (qpos - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("nhts,nhsd->nhtd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def grouped_matmul_ref(x, w):
+    """x: [G,M,K], w: [G,K,N] -> [G,M,N] (fp32 accumulation)."""
+    return jnp.einsum("gmk,gkn->gmn", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def armt_read_ref(x, wq, A, z, *, nu: int = 3):
+    """x: [N,T,D]; A: [N,P,Dv]; z: [N,P] -> [N,T,Dv]."""
+    q = jnp.einsum("ntd,dm->ntm", x.astype(jnp.float32),
+                   wq.astype(jnp.float32))
+    pq = dpfp(q, nu)
+    num = jnp.einsum("ntp,npv->ntv", pq, A.astype(jnp.float32))
+    den = jnp.einsum("ntp,np->nt", pq, z.astype(jnp.float32)) + EPS
+    return (num / den[..., None]).astype(x.dtype)
+
+
+def armt_update_ref(m, wk, wv, wb, A, z, *, nu: int = 3):
+    m32 = m.astype(jnp.float32)
+    k = jnp.einsum("nmd,de->nme", m32, wk.astype(jnp.float32))
+    v = jnp.einsum("nmd,dv->nmv", m32, wv.astype(jnp.float32))
+    beta = jax.nn.sigmoid(jnp.einsum("nmd,do->nmo", m32,
+                                     wb.astype(jnp.float32)))[..., 0]
+    pk = dpfp(k, nu)
+    zk = jnp.einsum("nmp,np->nm", pk, z.astype(jnp.float32))
+    vbar = jnp.einsum("nmp,npv->nmv", pk, A.astype(jnp.float32)) \
+        / (zk + EPS)[..., None]
+    gamma = 1.0 - zk / (jnp.sum(pk * pk, axis=-1) + EPS)
+    A_new = A.astype(jnp.float32) + jnp.einsum("nm,nmv,nmp->npv",
+                                               beta, v - vbar, pk)
+    z_new = z.astype(jnp.float32) + jnp.einsum("nm,nmp->np", gamma, pk)
+    return A_new.astype(A.dtype), z_new.astype(z.dtype)
+
+
+def mamba_scan_ref(x, dt, Bt, Ct, A_log, D, h0):
+    """Token-sequential reference (fp32)."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        da = jnp.exp(dt_t[..., None] * A)
+        h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, C_t) + D * x_t
+        return h, y
+
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          Bt.swapaxes(0, 1).astype(jnp.float32),
+          Ct.swapaxes(0, 1).astype(jnp.float32))
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), hT

@@ -1,0 +1,153 @@
+"""Per-(arch x shape) cell construction for the dry-run: the step function to
+lower, ShapeDtypeStruct input stand-ins (no allocation), and shardings.
+
+Cell semantics (DESIGN.md §5):
+  train_4k     train_step: fwd(segmented, schedule) + CE + grads + AdamW
+  prefill_32k  prefill: segmented forward -> (last logits, serve state)
+  decode_32k   serve_step vs a full KV cache of seq_len ('cache' mode) for
+               attention archs; SSM-state decode for attention-free archs
+  long_500k    serve_step in 'armt'/SSM mode — state is O(1) in context,
+               which is the paper's Fig. 1 memory claim
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ArchConfig, ShapeSpec, get_config
+from repro.models import decode_state_init, decode_step, forward_hidden, last_logits
+from repro.models.model import param_specs as model_param_specs
+from repro.optim import OptimConfig
+from repro.parallel import sharding as shd
+from repro.train import make_train_step, train_state_specs
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Any                   # function to jit
+    args: Tuple               # ShapeDtypeStruct pytrees
+    in_shardings: Tuple
+    out_shardings: Any
+    meta: Dict
+    donate: Tuple[int, ...] = ()
+
+
+def _token_inputs(cfg: ArchConfig, shape: ShapeSpec, mesh, *, train: bool):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((B, S), jnp.int32)}
+    if train:
+        batch["labels"] = SDS((B, S), jnp.int32)
+    if cfg.encoder is not None:
+        batch["enc_frames"] = SDS(
+            (B, cfg.encoder.n_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch, shd.batch_specs(mesh, batch)
+
+
+def resolve_schedule(cfg: ArchConfig, shape: ShapeSpec,
+                     schedule: Optional[str]) -> str:
+    if schedule:
+        return schedule
+    seg = cfg.armt.segment_len if cfg.armt else 1024
+    n_seg = shape.seq_len // seg
+    return "diagonal" if n_seg >= cfg.n_layers else "sequential"
+
+
+def _needs_fsdp(cfg: ArchConfig, mesh) -> bool:
+    """Params (bf16) per device exceed half the 16 GiB HBM under TP-only ->
+    shard them over the DP axes too (ZeRO-3/FSDP)."""
+    from repro.roofline.model_math import param_counts
+    total, _ = param_counts(cfg)
+    per_dev = total * 2 / shd.tp_size(mesh)
+    return per_dev > 8e9
+
+
+def _default_microbatches(cfg: ArchConfig, mesh) -> int:
+    """Keep per-device microbatch activations modest for wide/deep archs."""
+    if cfg.d_model >= 7000:
+        return 8
+    if cfg.d_model >= 4096 or cfg.n_layers >= 48:
+        return 4
+    return 1
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               schedule: Optional[str] = None,
+               serve_mode: Optional[str] = None,
+               microbatches: Optional[int] = None,
+               zero1: bool = True,
+               fsdp: Optional[bool] = None,
+               moment_dtype: Optional[str] = None,
+               cfg_override: Optional[ArchConfig] = None) -> Cell:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    dtype = jnp.dtype(cfg.dtype)
+    fsdp = _needs_fsdp(cfg, mesh) if fsdp is None else fsdp
+
+    if shape.kind == "train":
+        sched = resolve_schedule(cfg, shape, schedule)
+        big = cfg.name.startswith(("kimi", "jamba"))
+        mdt = moment_dtype or ("bfloat16" if big else "float32")
+        ocfg = OptimConfig(moment_dtype=mdt, factored_v=big)
+        mb = (_default_microbatches(cfg, mesh)
+              if microbatches is None else microbatches)
+        step = make_train_step(cfg, ocfg, schedule=sched, microbatches=mb)
+        state_shape = train_state_specs(cfg, ocfg)
+        pspecs = shd.param_specs(state_shape["params"], mesh, fsdp=fsdp)
+        ospecs = shd.opt_state_specs(state_shape["opt"],
+                                     state_shape["params"], mesh, zero1=zero1)
+        state_shardings = {"params": pspecs, "opt": ospecs}
+        batch, bspecs = _token_inputs(cfg, shape, mesh, train=True)
+        rep = shd.replicated(mesh)
+        out_shardings = (state_shardings,
+                         {"loss": rep, "lr": rep, "grad_norm": rep,
+                          "skipped": rep})
+        return Cell(arch, shape_name, step, (state_shape, batch),
+                    (state_shardings, bspecs), out_shardings,
+                    {"kind": "train", "schedule": sched,
+                     "microbatches": mb, "zero1": zero1, "fsdp": fsdp,
+                     "moment_dtype": mdt, "factored_v": big}, donate=(0,))
+
+    if shape.kind == "prefill":
+        sched = resolve_schedule(cfg, shape, schedule)
+
+        def prefill(params, batch):
+            hidden, fin = forward_hidden(
+                params, cfg, batch["tokens"], schedule=sched,
+                enc_frames=batch.get("enc_frames"))
+            return last_logits(params, cfg, hidden), fin
+
+        pshape = model_param_specs(cfg)
+        pspecs = shd.param_specs(pshape, mesh, fsdp=fsdp)
+        batch, bspecs = _token_inputs(cfg, shape, mesh, train=False)
+        return Cell(arch, shape_name, prefill, (pshape, batch),
+                    (pspecs, bspecs), None,
+                    {"kind": "prefill", "schedule": sched, "fsdp": fsdp})
+
+    # decode
+    mode = serve_mode or ("cache" if shape_name == "decode_32k" else "armt")
+    if not any(t.startswith("attn") or t == "dec" for t in cfg.layer_types):
+        mode = "armt"   # attention-free: state decode either way
+
+    def serve(params, dstate, tokens):
+        return decode_step(params, cfg, dstate, tokens, serve_mode=mode)
+
+    pshape = model_param_specs(cfg)
+    pspecs = shd.param_specs(pshape, mesh, fsdp=fsdp)
+    B = shape.global_batch
+    dshape = jax.eval_shape(
+        lambda: decode_state_init(cfg, B, serve_mode=mode,
+                                  max_len=shape.seq_len, dtype=dtype))
+    dspecs = shd.decode_state_specs(dshape, mesh, B)
+    toks = SDS((B,), jnp.int32)
+    tspec = NamedSharding(mesh, P(shd.batch_axes(mesh, B)))
+    return Cell(arch, shape_name, serve, (pshape, dshape, toks),
+                (pspecs, dspecs, tspec), (None, dspecs),
+                {"kind": "decode", "serve_mode": mode, "fsdp": fsdp,
+                 "cache_len": shape.seq_len}, donate=(1,))

@@ -1,0 +1,64 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On a real TPU fleet this runs once per host under the JAX distributed
+runtime (jax.distributed.initialize from TPU env vars); on CPU it drives the
+reduced config end-to-end with the same code path: data -> sharded batches ->
+fault-tolerant loop -> checkpoints.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--schedule", default="auto",
+                    choices=["auto", "diagonal", "sequential"])
+    ap.add_argument("--task", default="needle", choices=["needle", "lm"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--distributed", action="store_true",
+                    help="initialize the JAX distributed runtime (multi-host)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        import jax
+        jax.distributed.initialize()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import lm_stream, needle_qa
+    from repro.optim import OptimConfig
+    from repro.train.loop import train_loop
+
+    cfg = (get_smoke_config(args.arch, seq_len=args.seq_len)
+           if args.smoke else get_config(args.arch))
+    ocfg = OptimConfig(lr=args.lr, total_steps=args.steps,
+                       warmup_steps=max(10, args.steps // 20))
+    gen = needle_qa if args.task == "needle" else lm_stream
+    data = gen(cfg.vocab, args.batch, args.seq_len, seed=args.seed)
+
+    def log(m):
+        print(f"step {m['step']:5d} loss {m['loss']:.4f} "
+              f"gnorm {m['grad_norm']:.2f} lr {m['lr']:.2e} "
+              f"dt {m['step_time_s']:.2f}s", flush=True)
+
+    out = train_loop(cfg, ocfg, data, steps=args.steps,
+                     ckpt_dir=args.ckpt_dir, schedule=args.schedule,
+                     microbatches=args.microbatches, log_fn=log, log_every=10,
+                     seed=args.seed)
+    print(f"done at step {out['last_step']}; "
+          f"final loss {out['history'][-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Per-type block parameter init, state init, and application.
+
+Block types (cfg.layer_types entries):
+  attn       pre-norm attention + dense FFN              (+ ARMT memory)
+  attn_moe   pre-norm attention + MoE FFN                (+ ARMT memory)
+  mamba      pre-norm mamba mixer [+ dense FFN if d_ff]  (SSM state)
+  mamba_moe  pre-norm mamba mixer + MoE FFN              (SSM state)
+  enc        bidirectional attention + MLP (whisper encoder; stateless)
+  dec        causal self-attn + cross-attn + MLP         (+ ARMT memory; cross
+             K/V carried as constant state)
+
+``make_apply_block(cfg, mode)`` binds a closure with the executor signature
+(btype, params, x, state) -> (y, new_state); the same closure serves both
+sequential and diagonal executors (the reordering is the only difference).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.memory import mem_param_init, mem_read, mem_state_init, mem_update
+from repro.models.attention import (attention, attn_param_init, cross_attention)
+from repro.models.layers import ffn, ffn_init, norm, norm_init
+from repro.models.mamba import (mamba_mixer, mamba_param_init, mamba_state_init)
+from repro.models.moe import moe_ffn, moe_param_init
+
+
+def _is_attn(t: str) -> bool:
+    return t in ("attn", "attn_moe", "dec", "enc")
+
+
+def block_d_ff(cfg, t: str, prelude: bool) -> int:
+    if t.endswith("moe"):
+        return 0                      # MoE replaces the dense FFN
+    if prelude and cfg.prelude_d_ff:
+        return cfg.prelude_d_ff
+    return cfg.d_ff
+
+
+def block_param_init(key, t: str, cfg, dtype, *, prelude: bool = False) -> Dict:
+    ks = jax.random.split(key, 8)
+    p: Dict = {"ln1": norm_init(cfg.norm, cfg.d_model, dtype)}
+    if _is_attn(t):
+        p["attn"] = attn_param_init(ks[0], cfg, dtype)
+        if cfg.armt is not None and t != "enc":
+            p["mem"] = mem_param_init(ks[1], cfg.d_model, cfg.armt, dtype)
+    if t == "dec":
+        p["ln_x"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["xattn"] = attn_param_init(ks[2], cfg, dtype, cross=True)
+    if t.startswith("mamba"):
+        p["mixer"] = mamba_param_init(ks[3], cfg.d_model, cfg.ssm, dtype)
+    if t.endswith("moe"):
+        p["ln2"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["moe"] = moe_param_init(ks[4], cfg.d_model, cfg.moe, cfg.act, dtype)
+    else:
+        dff = block_d_ff(cfg, t, prelude)
+        if dff > 0:
+            p["ln2"] = norm_init(cfg.norm, cfg.d_model, dtype)
+            p["ffn"] = ffn_init(ks[5], cfg.act, cfg.d_model, dff, dtype,
+                                bias=(cfg.norm == "layernorm"))
+    return p
+
+
+def block_state_init(t: str, cfg, batch: int, mode: str, dtype) -> Dict:
+    """Layer-local recurrent state for segmented execution. mode: segmented|full."""
+    st: Dict = {}
+    if mode == "segmented":
+        if cfg.armt is not None and _is_attn(t) and t != "enc":
+            st.update(mem_state_init(batch, cfg.d_model, cfg.armt, dtype))
+        if t.startswith("mamba"):
+            st.update(mamba_state_init(batch, cfg.d_model, cfg.ssm, dtype))
+    else:
+        if t.startswith("mamba"):  # full mode still needs zero ssm state
+            st.update(mamba_state_init(batch, cfg.d_model, cfg.ssm, dtype))
+    if t == "dec" and cfg.encoder is not None:
+        hd, kv, F = cfg.head_dim, cfg.n_kv_heads, cfg.encoder.n_frames
+        st["ck"] = jnp.zeros((batch, F, kv, hd), dtype)
+        st["cv"] = jnp.zeros((batch, F, kv, hd), dtype)
+    return st
+
+
+def make_apply_block(cfg, *, mode: str = "segmented", ssm_method: str = "scan"):
+    """Returns apply_block(btype, p, x, state) -> (y, new_state).
+
+    mode='segmented': ARMT memory active (read before layer, delta-rule update
+    from memory-token outputs — paper eq. 2); mode='full': plain transformer.
+    """
+    armt_on = cfg.armt is not None and mode == "segmented"
+    M = cfg.armt.num_mem_tokens if armt_on else 0
+
+    def apply_ffn(t: str, h, p):
+        if t.endswith("moe"):
+            return h + moe_ffn(norm(cfg.norm, h, p["ln2"]), p["moe"],
+                               cfg.moe, cfg.act)
+        if "ffn" in p:
+            return h + ffn(cfg.act, norm(cfg.norm, h, p["ln2"]), p["ffn"])
+        return h
+
+    def apply_block(t: str, p, x, state):
+        new_state = dict(state)
+        if _is_attn(t):
+            use_mem = armt_on and t != "enc"
+            if use_mem:
+                x = x + mem_read(p["mem"], state, x, cfg.armt)
+            a = attention(norm(cfg.norm, x, p["ln1"]), p["attn"], cfg,
+                          bidirectional=(t == "enc"))
+            h = x + a
+            if t == "dec":
+                h = h + cross_attention(norm(cfg.norm, h, p["ln_x"]), p["xattn"],
+                                        state["ck"], state["cv"], cfg)
+            y = apply_ffn(t, h, p)
+            if use_mem and M > 0:
+                upd = mem_update(p["mem"], {"A": state["A"], "z": state["z"]},
+                                 y[:, -M:, :], cfg.armt)
+                new_state.update(upd)
+            return y, new_state
+
+        if t.startswith("mamba"):
+            mix, new_ssm = mamba_mixer(
+                norm(cfg.norm, x, p["ln1"]), p["mixer"], cfg.ssm,
+                {"h": state["h"], "conv": state["conv"]}, method=ssm_method)
+            h = x + mix
+            y = apply_ffn(t, h, p)
+            new_state.update(new_ssm)
+            return y, new_state
+
+        raise ValueError(f"unknown block type {t!r}")
+
+    return apply_block

@@ -1,0 +1,102 @@
+"""Elementary layers: norms, RoPE, MLPs, embeddings. Pure functions on pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Norms (fp32 math, cast back)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, p, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * p["w"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, p, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm(kind: str, x: jax.Array, p) -> jax.Array:
+    return rmsnorm(x, p) if kind == "rmsnorm" else layernorm(x, p)
+
+
+def norm_init(kind: str, d: int, dtype):
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE (llama convention: rotate-half over the leading `fraction` of head dims)
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jax.Array, d_rot: int, theta: float):
+    """positions: [...,T] int -> cos,sin [...,T, d_rot//2] (fp32)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv       # [...,T,d_rot/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               fraction: float = 1.0) -> jax.Array:
+    """x: [B, T, H, hd]; rotary applied to the first fraction*hd dims."""
+    hd = x.shape[-1]
+    d_rot = int(hd * fraction)
+    d_rot -= d_rot % 2
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]                                      # [B?,T,1,d_rot/2]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, p) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, p["wg"])
+    u = jnp.einsum("...d,df->...f", x, p["wu"])
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, p["wd"])
+
+
+def mlp_gelu(x: jax.Array, p) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"]) + p.get("bi", 0)
+    h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("...f,fd->...d", h, p["wo"]) + p.get("bo", 0)
+
+
+def ffn(act: str, x: jax.Array, p) -> jax.Array:
+    return swiglu(x, p) if act == "silu" else mlp_gelu(x, p)
+
+
+def ffn_init(key, act: str, d: int, f: int, dtype, bias: bool = False):
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    if act == "silu":
+        kg, ku, kd = jax.random.split(key, 3)
+        return {"wg": (jax.random.normal(kg, (d, f)) * s_in).astype(dtype),
+                "wu": (jax.random.normal(ku, (d, f)) * s_in).astype(dtype),
+                "wd": (jax.random.normal(kd, (f, d)) * s_out).astype(dtype)}
+    ki, ko = jax.random.split(key, 2)
+    p = {"wi": (jax.random.normal(ki, (d, f)) * s_in).astype(dtype),
+         "wo": (jax.random.normal(ko, (f, d)) * s_out).astype(dtype)}
+    if bias:
+        p["bi"] = jnp.zeros((f,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = (d_in ** -0.5) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)

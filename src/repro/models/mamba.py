@@ -1,0 +1,157 @@
+"""Mamba-1 block (selective SSM) with carried state — a PRMT member.
+
+Layer-local recurrent state = (h [B, dI, dS], conv tail [B, d_conv-1, dI]);
+carried across segments exactly like ARMT's (A, z), so the diagonal executor
+schedules Mamba layers with no special casing.
+
+Two scan strategies:
+  * 'scan'  — token-sequential lax.scan (memory-light; the faithful mamba-1
+              recurrence; the Pallas kernel fuses this in VMEM on TPU)
+  * 'assoc' — chunked associative scan (log-depth within chunks; trades
+              memory B*Q*dI*dS per chunk for parallelism)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SSMConfig
+from repro.utils import cdiv
+
+
+def mamba_dims(d_model: int, scfg: SSMConfig) -> Tuple[int, int]:
+    d_inner = scfg.expand * d_model
+    dt_rank = scfg.dt_rank or cdiv(d_model, 16)
+    return d_inner, dt_rank
+
+
+def mamba_param_init(key, d_model: int, scfg: SSMConfig, dtype) -> Dict:
+    dI, dtr = mamba_dims(d_model, scfg)
+    dS, dc = scfg.d_state, scfg.d_conv
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, dS + 1, dtype=jnp.float32)[None, :], (dI, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d_model, 2 * dI)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, dI)) * dc ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((dI,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (dI, dtr + 2 * dS)) * dI ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dtr, dI)) * dtr ** -0.5).astype(dtype),
+        "dt_bias": jnp.full((dI,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(A),                        # fp32
+        "D": jnp.ones((dI,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (dI, d_model)) * dI ** -0.5).astype(dtype),
+    }
+
+
+def mamba_state_init(batch: int, d_model: int, scfg: SSMConfig, dtype) -> Dict:
+    dI, _ = mamba_dims(d_model, scfg)
+    return {
+        "h": jnp.zeros((batch, dI, scfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, scfg.d_conv - 1, dI), dtype),
+    }
+
+
+def _causal_conv(xi: jax.Array, tail: jax.Array, w: jax.Array, b: jax.Array):
+    """Depthwise causal conv1d. xi: [B,T,dI]; tail: [B,dc-1,dI] (prev inputs).
+    Returns (y [B,T,dI], new_tail)."""
+    dc = w.shape[0]
+    T = xi.shape[1]
+    xp = jnp.concatenate([tail.astype(xi.dtype), xi], axis=1)   # [B, T+dc-1, dI]
+    y = sum(xp[:, j:j + T, :] * w[j] for j in range(dc)) + b
+    new_tail = jax.lax.dynamic_slice_in_dim(xp, T, dc - 1, axis=1)
+    return y, new_tail
+
+
+def _ssm_inputs(xc: jax.Array, p: Dict, scfg: SSMConfig):
+    """xc: [B,T,dI] (post-conv, post-silu) -> (dt [B,T,dI], Bt, Ct [B,T,dS])."""
+    dS = scfg.d_state
+    dtr = p["dt_proj"].shape[0]
+    proj = jnp.einsum("bti,ir->btr", xc, p["x_proj"])
+    dt_r, Bt, Ct = jnp.split(proj, [dtr, dtr + dS], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,ri->bti", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return dt, Bt.astype(jnp.float32), Ct.astype(jnp.float32)
+
+
+def selective_scan(xc, dt, Bt, Ct, A_log, h0, *, method: str = "scan",
+                   chunk: int = 128):
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t
+    xc: [B,T,dI]; dt: [B,T,dI]; Bt/Ct: [B,T,dS]; h0: [B,dI,dS] fp32.
+    Returns (y [B,T,dI] fp32, h_T)."""
+    A = -jnp.exp(A_log.astype(jnp.float32))                     # [dI,dS]
+    x32 = xc.astype(jnp.float32)
+
+    if method == "assoc":
+        return _selective_scan_assoc(x32, dt, Bt, Ct, A, h0, chunk)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp                               # [B,dI],[B,dI],[B,dS]
+        da = jnp.exp(dt_t[..., None] * A)                       # [B,dI,dS]
+        h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, C_t)
+        return h, y
+
+    inputs = (x32.swapaxes(0, 1), dt.swapaxes(0, 1),
+              Bt.swapaxes(0, 1), Ct.swapaxes(0, 1))
+    hT, ys = jax.lax.scan(step, h0, inputs)
+    return ys.swapaxes(0, 1), hT
+
+
+def _selective_scan_assoc(x32, dt, Bt, Ct, A, h0, chunk: int):
+    """Chunked associative scan: within a chunk, combine (a,b) pairs with
+    (a2*a1, a2*b1+b2); chunks processed sequentially with carried h."""
+    B, T, dI = x32.shape
+    dS = A.shape[1]
+    nC = cdiv(T, chunk)
+    pad = nC * chunk - T
+    if pad:
+        z = lambda u: jnp.pad(u, ((0, 0), (0, pad)) + ((0, 0),) * (u.ndim - 2))
+        x32, dt, Bt, Ct = z(x32), z(dt), z(Bt), z(Ct)
+
+    @jax.checkpoint
+    def chunk_step(h, inp):
+        # remat: backward recomputes the intra-chunk scan, so only the
+        # chunk-boundary states h are saved — the memory-term fix for the
+        # 64-layer SSM archs (EXPERIMENTS.md §Perf)
+        xq, dtq, Bq, Cq = inp                                    # [B,Q,...]
+        a = jnp.exp(dtq[..., None] * A)                          # [B,Q,dI,dS]
+        b = (dtq * xq)[..., None] * Bq[:, :, None, :]            # [B,Q,dI,dS]
+
+        def comb(l, r):
+            return (r[0] * l[0], r[0] * l[1] + r[1])
+        aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+        hs = aa * h[:, None] + bb                                # [B,Q,dI,dS]
+        y = jnp.einsum("bqis,bqs->bqi", hs, Cq)
+        return hs[:, -1], y
+
+    xs = tuple(u.reshape(B, nC, chunk, *u.shape[2:]).swapaxes(0, 1)
+               for u in (x32, dt, Bt, Ct))
+    hT, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, nC * chunk, dI)
+    return y[:, :T], hT
+
+
+def mamba_mixer(x, p, scfg: SSMConfig, state: Dict, *, method: str = "scan"):
+    """Full mamba mixer over a segment. x: [B,T,D] -> (y [B,T,D], new_state)."""
+    dI = p["in_proj"].shape[1] // 2
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xi, z = xz[..., :dI], xz[..., dI:]
+    xc, new_tail = _causal_conv(xi, state["conv"], p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt, Bt, Ct = _ssm_inputs(xc, p, scfg)
+    y32, hT = selective_scan(xc, dt, Bt, Ct, p["A_log"], state["h"],
+                             method=method)
+    y32 = y32 + p["D"] * xc.astype(jnp.float32)
+    y = (y32.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bti,id->btd", y, p["out_proj"])
+    return out, {"h": hT, "conv": new_tail}
+
+
+def mamba_decode_step(x, p, scfg: SSMConfig, state: Dict):
+    """Single-token decode. x: [B,1,D] -> (y [B,1,D], new_state)."""
+    return mamba_mixer(x, p, scfg, state, method="scan")

@@ -1,0 +1,407 @@
+"""Unified config-driven LM with three execution modes:
+
+  * full       — plain transformer forward (the paper's Llama baseline)
+  * segmented  — PRMT/ARMT recurrence, sequential schedule (paper baseline ARMT)
+  * segmented + diagonal schedule — the paper's contribution
+
+plus a serving path (`decode_step`) that runs one token against carried state:
+'cache' mode (full KV cache — standard decoding) or 'armt' mode (associative
+memory + current-segment cache — constant memory in sequence length).
+
+Decode reuses the sequential executor over a single-token "segment", so the
+per-layer code is shared and the HLO stays scan-compact for 61-72-layer archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.core.memory import mem_read, mem_update
+from repro.core.schedule import StackLayout
+from repro.core.sequential import run_sequential
+from repro.core.diagonal import run_diagonal
+from repro.models.attention import (attention, cross_kv, decode_attention,
+                                    sdpa, causal_mask)
+from repro.models.blocks import (block_param_init, block_state_init,
+                                 make_apply_block, _is_attn)
+from repro.models.layers import ffn, norm, norm_init
+from repro.models.mamba import mamba_mixer
+from repro.models.moe import moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=None) -> Dict:
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    keys = jax.random.split(key, 16)
+    layout = StackLayout.from_config(cfg)
+    params: Dict = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * 0.02).astype(dtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(keys[1], (cfg.d_model, cfg.vocab))
+                          * cfg.d_model ** -0.5).astype(dtype)
+    if cfg.armt is not None and cfg.armt.num_mem_tokens > 0:
+        params["mem_tokens"] = (jax.random.normal(
+            keys[2], (cfg.armt.num_mem_tokens, cfg.d_model)) * 0.02).astype(dtype)
+    if not cfg.use_rope and cfg.encoder is not None:
+        params["pos_embed"] = (jax.random.normal(
+            keys[3], (cfg.max_position, cfg.d_model)) * 0.02).astype(dtype)
+
+    prelude = []
+    for j, t in enumerate(layout.prelude):
+        prelude.append(block_param_init(jax.random.fold_in(keys[4], j), t, cfg,
+                                        dtype, prelude=True))
+    params["prelude"] = tuple(prelude)
+
+    pattern = []
+    for p_i, t in enumerate(layout.pattern):
+        sub = jax.random.split(jax.random.fold_in(keys[5], p_i), layout.n_super)
+        stacked = jax.vmap(
+            lambda k, _t=t: block_param_init(k, _t, cfg, dtype))(sub)
+        pattern.append(stacked)
+    params["pattern"] = tuple(pattern)
+
+    if cfg.encoder is not None:
+        ek = jax.random.split(keys[6], cfg.encoder.n_layers)
+        params["enc"] = {
+            "blocks": jax.vmap(
+                lambda k: block_param_init(k, "enc", cfg, dtype))(ek),
+            "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+            "pos": (jax.random.normal(keys[7], (cfg.encoder.n_frames,
+                                                cfg.d_model)) * 0.02).astype(dtype),
+        }
+    return params
+
+
+def param_specs(cfg: ArchConfig, dtype=None):
+    """Shape/dtype tree without allocation (for dry-runs of 1T-param archs)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+def init_state(cfg: ArchConfig, batch: int, mode: str, dtype) -> Dict:
+    layout = StackLayout.from_config(cfg)
+    state: Dict = {"prelude": tuple(
+        block_state_init(t, cfg, batch, mode, dtype) for t in layout.prelude)}
+    pattern = []
+    for t in layout.pattern:
+        st = block_state_init(t, cfg, batch, mode, dtype)
+        pattern.append(jax.tree_util.tree_map(
+            lambda a: jnp.zeros((layout.n_super,) + a.shape, a.dtype), st))
+    state["pattern"] = tuple(pattern)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper) — frontend is a stub: callers pass frame *embeddings*
+# ---------------------------------------------------------------------------
+
+def encode(params: Dict, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: [B, F, d_model] precomputed frame embeddings -> [B, F, d_model]."""
+    x = frames + params["enc"]["pos"][None, :frames.shape[1]].astype(frames.dtype)
+    apply = make_apply_block(cfg, mode="full")
+
+    def step(h, blk_p):
+        y, _ = apply("enc", blk_p, h, {})
+        return y, None
+
+    x, _ = jax.lax.scan(step, x, params["enc"]["blocks"])
+    return norm(cfg.norm, x, params["enc"]["final_norm"])
+
+
+def _fill_cross_kv(params: Dict, cfg: ArchConfig, state: Dict,
+                   enc_out: jax.Array) -> Dict:
+    """Compute per-decoder-layer cross K/V from encoder output into state."""
+    new_pattern = []
+    for p_i, t in enumerate(tuple(cfg.block_pattern)):
+        st = state["pattern"][p_i]
+        if t == "dec":
+            ck, cv = jax.vmap(
+                lambda xp: cross_kv(enc_out, xp, cfg))(params["pattern"][p_i]["xattn"])
+            st = dict(st)
+            st["ck"], st["cv"] = ck, cv
+        new_pattern.append(st)
+    return {"prelude": state["prelude"], "pattern": tuple(new_pattern)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _resolve_seg_len(cfg: ArchConfig, seg_len: Optional[int],
+                     total: Optional[int] = None) -> int:
+    if not seg_len:
+        seg_len = cfg.armt.segment_len if cfg.armt is not None else 1024
+    if total is not None:
+        seg_len = min(seg_len, total)
+    return seg_len
+
+
+def embed_segments(params: Dict, cfg: ArchConfig, tokens: jax.Array,
+                   seg_len: int, with_mem: bool) -> jax.Array:
+    """tokens: [B, S_total] -> [n_seg, B, seg_len (+M), D]."""
+    B, total = tokens.shape
+    assert total % seg_len == 0, (total, seg_len)
+    S = total // seg_len
+    segs = tokens.reshape(B, S, seg_len).transpose(1, 0, 2)      # [S,B,T]
+    x = params["embed"][segs]                                     # [S,B,T,D]
+    if with_mem and "mem_tokens" in params:
+        M = params["mem_tokens"].shape[0]
+        mem = jnp.broadcast_to(params["mem_tokens"][None, None],
+                               (S, B, M, x.shape[-1]))
+        x = jnp.concatenate([x, mem], axis=2)
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][None, None, :x.shape[2]].astype(x.dtype)
+    return x
+
+
+def forward_hidden(params: Dict, cfg: ArchConfig, tokens: jax.Array, *,
+                   schedule: str = "diagonal", mode: str = "segmented",
+                   seg_len: Optional[int] = None,
+                   enc_frames: Optional[jax.Array] = None,
+                   ssm_method: str = "assoc",
+                   slot_spec=None) -> Tuple[jax.Array, Dict]:
+    """Returns (hidden [S, B, T, D] — memory-token positions stripped,
+    final executor state)."""
+    B = tokens.shape[0]
+    dtype = params["embed"].dtype
+    if mode == "full":
+        seg_len = tokens.shape[1]
+        with_mem = False
+    else:
+        seg_len = _resolve_seg_len(cfg, seg_len, tokens.shape[1])
+        with_mem = cfg.armt is not None and cfg.armt.num_mem_tokens > 0
+
+    x = embed_segments(params, cfg, tokens, seg_len, with_mem)
+    layout = StackLayout.from_config(cfg)
+    if schedule == "auto":
+        # Paper Table 9: diagonal wins once the grid is deep in segments; fall
+        # back to sequential when the diagonal would be mostly fill/drain.
+        schedule = "diagonal" if x.shape[0] >= layout.n_layers else "sequential"
+    state0 = init_state(cfg, B, mode, dtype)
+    if cfg.encoder is not None:
+        assert enc_frames is not None, "whisper needs enc_frames (stub frontend)"
+        enc_out = encode(params, cfg, enc_frames)
+        state0 = _fill_cross_kv(params, cfg, state0, enc_out)
+
+    apply = make_apply_block(cfg, mode=mode if mode == "full" else "segmented",
+                             ssm_method=ssm_method)
+    exec_params = {"prelude": params["prelude"], "pattern": params["pattern"]}
+    kw = {"remat": cfg.remat != "none"}
+    if schedule == "diagonal":
+        run = run_diagonal
+        kw["buf_spec"] = slot_spec
+    else:
+        run = run_sequential
+    ys, fin = run(layout, exec_params, state0, x, apply, **kw)
+    hidden = ys[:, :, :seg_len] if with_mem else ys
+    return hidden, fin
+
+
+def _head_matmul(params: Dict, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", h, params["embed"])
+    return jnp.einsum("...d,dv->...v", h, params["head"])
+
+
+def lm_loss(params: Dict, cfg: ArchConfig, tokens: jax.Array,
+            labels: jax.Array, *, schedule: str = "diagonal",
+            mode: str = "segmented", seg_len: Optional[int] = None,
+            loss_mask: Optional[jax.Array] = None,
+            enc_frames: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token NLL. Logits are never materialized for the whole
+    sequence — CE is computed per segment inside a scan (DESIGN.md §6.1)."""
+    hidden, _ = forward_hidden(params, cfg, tokens, schedule=schedule,
+                               mode=mode, seg_len=seg_len,
+                               enc_frames=enc_frames)
+    S, B, T, D = hidden.shape
+    labels_seg = labels.reshape(B, S, T).transpose(1, 0, 2)
+    if loss_mask is None:
+        mask_seg = jnp.ones((S, B, T), jnp.float32)
+    else:
+        mask_seg = loss_mask.reshape(B, S, T).transpose(1, 0, 2).astype(jnp.float32)
+
+    # chunk tokens inside each segment too: fp32 logits for a [B, T, V]
+    # block of e.g. qwen2.5 (T=1024, V=152k) would be ~10 GB — chunked CE
+    # keeps the transient at B*chunk*V (DESIGN.md §6.1)
+    chunk = 256
+    n_chunks = T // chunk if (T % chunk == 0 and T > chunk) else 1
+    Tc = T // n_chunks
+
+    def _chunked(a):
+        # [S, B, T, ...] -> [S*n, B, T/n, ...]
+        a = a.reshape((S, B, n_chunks, Tc) + a.shape[3:])
+        return a.swapaxes(1, 2).reshape((S * n_chunks, B, Tc) + a.shape[4:])
+
+    hidden_c = _chunked(hidden)
+    labels_c = _chunked(labels_seg)
+    mask_c = _chunked(mask_seg)
+
+    def ce_step(acc, inp):
+        h, y, m = inp
+        hn = norm(cfg.norm, h, params["final_norm"])
+        logits = _head_matmul(params, cfg, hn).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (acc[0] + nll.sum(), acc[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(ce_step, (jnp.float32(0), jnp.float32(0)),
+                                 (hidden_c, labels_c, mask_c))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def last_logits(params: Dict, cfg: ArchConfig, hidden: jax.Array) -> jax.Array:
+    """Logits of the final position of the final segment. hidden: [S,B,T,D]."""
+    h = norm(cfg.norm, hidden[-1, :, -1], params["final_norm"])
+    return _head_matmul(params, cfg, h).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode / serving
+# ---------------------------------------------------------------------------
+
+def decode_state_init(cfg: ArchConfig, batch: int, *, serve_mode: str,
+                      max_len: int, dtype) -> Dict:
+    """Per-layer decode state. serve_mode 'cache': full KV cache of max_len.
+    serve_mode 'armt': associative memory + current-segment cache."""
+    layout = StackLayout.from_config(cfg)
+    hd = cfg.head_dim if cfg.n_heads > 0 else 0
+    kv = max(cfg.n_kv_heads, 1)
+
+    def one(t: str) -> Dict:
+        st = block_state_init(t, cfg, batch,
+                              "segmented" if serve_mode == "armt" else "full",
+                              dtype)
+        if _is_attn(t) and t != "enc":
+            if serve_mode == "armt":
+                cache_len = (cfg.armt.segment_len + cfg.armt.num_mem_tokens
+                             if cfg.armt else max_len)
+            else:
+                cache_len = max_len
+                st.pop("A", None), st.pop("z", None)
+            st["k"] = jnp.zeros((batch, cache_len, kv, hd), dtype)
+            st["v"] = jnp.zeros((batch, cache_len, kv, hd), dtype)
+        return st
+
+    state = {"prelude": tuple(one(t) for t in layout.prelude)}
+    pattern = []
+    for t in layout.pattern:
+        st = one(t)
+        pattern.append(jax.tree_util.tree_map(
+            lambda a: jnp.zeros((layout.n_super,) + a.shape, a.dtype), st))
+    state["pattern"] = tuple(pattern)
+    state["pos"] = jnp.zeros((), jnp.int32)   # position (global or in-segment)
+    return state
+
+
+def make_decode_apply(cfg: ArchConfig, serve_mode: str, pos):
+    """Block apply for decode: x [B, Tq, D] against per-layer caches."""
+    armt_on = serve_mode == "armt" and cfg.armt is not None
+
+    def apply_ffn(t, h, p):
+        if t.endswith("moe"):
+            return h + moe_ffn(norm(cfg.norm, h, p["ln2"]), p["moe"],
+                               cfg.moe, cfg.act)
+        if "ffn" in p:
+            return h + ffn(cfg.act, norm(cfg.norm, h, p["ln2"]), p["ffn"])
+        return h
+
+    def apply(t, p, x, st):
+        new = dict(st)
+        if _is_attn(t):
+            if armt_on:
+                x = x + mem_read(p["mem"], st, x, cfg.armt)
+            a, kvc = decode_attention(norm(cfg.norm, x, p["ln1"]), p["attn"],
+                                      cfg, {"k": st["k"], "v": st["v"]}, pos)
+            new["k"], new["v"] = kvc["k"], kvc["v"]
+            h = x + a
+            if t == "dec":
+                from repro.models.attention import cross_attention
+                h = h + cross_attention(norm(cfg.norm, h, p["ln_x"]),
+                                        p["xattn"], st["ck"], st["cv"], cfg)
+            y = apply_ffn(t, h, p)
+            return y, new
+        if t.startswith("mamba"):
+            mix, new_ssm = mamba_mixer(norm(cfg.norm, x, p["ln1"]), p["mixer"],
+                                       cfg.ssm,
+                                       {"h": st["h"], "conv": st["conv"]})
+            y = apply_ffn(t, x + mix, p)
+            new.update(new_ssm)
+            return y, new
+        raise ValueError(t)
+
+    return apply
+
+
+def decode_step(params: Dict, cfg: ArchConfig, state: Dict,
+                tokens: jax.Array, *, serve_mode: str = "armt"):
+    """Decoding step. tokens: [B] (one step) or [B, Tq] (chunked prefill) ->
+    (logits of the last position [B, V] fp32, new state).
+
+    Runs the layer stack via the sequential executor over a single
+    "segment" so the lowered HLO is a compact scan for deep archs.
+    """
+    layout = StackLayout.from_config(cfg)
+    pos = state["pos"]
+    toks = tokens if tokens.ndim == 2 else tokens[:, None]
+    Tq = toks.shape[1]
+    x = params["embed"][toks]                                    # [B,Tq,D]
+    if "pos_embed" in params:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, Tq, axis=0)[None].astype(x.dtype)
+    apply = make_decode_apply(cfg, serve_mode, pos)
+    exec_params = {"prelude": params["prelude"], "pattern": params["pattern"]}
+    exec_state = {"prelude": state["prelude"], "pattern": state["pattern"]}
+    ys, fin = run_sequential(layout, exec_params, exec_state, x[None], apply)
+    h = norm(cfg.norm, ys[0, :, -1], params["final_norm"])
+    logits = _head_matmul(params, cfg, h).astype(jnp.float32)
+    new_state = {"prelude": fin["prelude"], "pattern": fin["pattern"],
+                 "pos": pos + Tq}
+    return logits, new_state
+
+
+def flush_segment(params: Dict, cfg: ArchConfig, state: Dict):
+    """ARMT segment boundary: run the memory tokens through the stack against
+    the current-segment cache, delta-update every layer's (A, z), then reset
+    the segment cache and position."""
+    assert cfg.armt is not None
+    layout = StackLayout.from_config(cfg)
+    M = cfg.armt.num_mem_tokens
+    B = state["pos"].shape or None
+    mem = params["mem_tokens"]
+    # infer batch from any cache leaf
+    first = jax.tree_util.tree_leaves(state["pattern"])[0]
+    batch = first.shape[1]
+    x = jnp.broadcast_to(mem[None], (batch, M, mem.shape[-1]))
+    if "pos_embed" in params:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], state["pos"], M, axis=0)[None].astype(x.dtype)
+
+    pos = state["pos"]
+    base_apply = make_decode_apply(cfg, "armt", pos)
+
+    def apply(t, p, xx, st):
+        y, new = base_apply(t, p, xx, st)
+        if _is_attn(t) and t != "enc" and "A" in st:
+            upd = mem_update(p["mem"], {"A": st["A"], "z": st["z"]}, y, cfg.armt)
+            new = dict(new)
+            new.update(upd)
+            # reset current-segment cache
+            new["k"] = jnp.zeros_like(st["k"])
+            new["v"] = jnp.zeros_like(st["v"])
+        return y, new
+
+    exec_params = {"prelude": params["prelude"], "pattern": params["pattern"]}
+    exec_state = {"prelude": state["prelude"], "pattern": state["pattern"]}
+    _, fin = run_sequential(layout, exec_params, exec_state, x[None], apply)
+    return {"prelude": fin["prelude"], "pattern": fin["pattern"],
+            "pos": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN with argsort-based fixed-capacity dispatch.
+
+Scales to hundreds of experts (Kimi-K2: 384) where the classic [T, E, C]
+one-hot dispatch einsum would need terabytes: tokens are routed by sorting
+(token, k) pairs by expert id, ranking within expert, and scattering into an
+[E, C, D] buffer. All shapes static -> jit/vmap/pjit-friendly; the expert dim
+E is the EP sharding axis (PartitionSpec over 'model').
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import MoEConfig
+from repro.models.layers import ffn, ffn_init
+from repro.utils import round_up
+
+
+def moe_param_init(key, d_model: int, mcfg: MoEConfig, act: str, dtype) -> Dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    E, F = mcfg.n_experts, mcfg.d_expert
+    s = d_model ** -0.5
+    kg, ku, kd = jax.random.split(ke, 3)
+    p = {
+        "router": (jax.random.normal(kr, (d_model, E)) * s).astype(jnp.float32),
+        # stacked expert FFNs (swiglu): [E, D, F] / [E, F, D]
+        "wg": (jax.random.normal(kg, (E, d_model, F)) * s).astype(dtype),
+        "wu": (jax.random.normal(ku, (E, d_model, F)) * s).astype(dtype),
+        "wd": (jax.random.normal(kd, (E, F, d_model)) * F ** -0.5).astype(dtype),
+    }
+    if mcfg.d_shared:
+        p["shared"] = ffn_init(ks, act, d_model, mcfg.d_shared, dtype)
+    return p
+
+
+def capacity(n_tokens: int, mcfg: MoEConfig) -> int:
+    c = int(n_tokens * mcfg.top_k * mcfg.capacity_factor / mcfg.n_experts)
+    return max(8, round_up(c, 8))
+
+
+def moe_ffn(x: jax.Array, p: Dict, mcfg: MoEConfig, act: str) -> jax.Array:
+    """x: [B, T, D] -> [B, T, D]."""
+    B, T, D = x.shape
+    if mcfg.dispatch == "einsum":
+        # Switch/GSPMD-style one-hot einsum dispatch per batch row: every op
+        # is sharding-transparent (no sort/searchsorted/scatter, which GSPMD
+        # must replicate) — the fully-local path under slot/batch sharding
+        y = jax.vmap(lambda xr: _moe_tokens_einsum(xr, p, mcfg, act))(x)
+        return y
+    if mcfg.dispatch == "per_row" and B > 1:
+        # dispatch independently per batch row: under batch sharding the
+        # argsort/scatter stay local to each data shard (no gather)
+        y = jax.vmap(lambda xr: _moe_tokens(xr[None], p, mcfg, act))(x)
+        return y.reshape(B, T, D)
+    return _moe_tokens(x, p, mcfg, act)
+
+
+def _moe_tokens_einsum(xf: jax.Array, p: Dict, mcfg: MoEConfig,
+                       act: str) -> jax.Array:
+    """xf: [N, D] one batch row. Iterative-argmax top-k + one-hot positions
+    via cumsum + dispatch/combine einsums (the classic TPU MoE formulation;
+    memory O(N*E*C) per row)."""
+    N, D = xf.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    C = capacity(N, mcfg)
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    remaining = probs
+    count_base = jnp.zeros((E,), jnp.float32)
+    disp = jnp.zeros((N, E, C), jnp.float32)     # dispatch one-hot
+    comb = jnp.zeros((N, E, C), jnp.float32)     # gate-weighted combine
+    topk_gate_sum = jnp.zeros((N,), jnp.float32)
+    for _ in range(K):
+        idx = jnp.argmax(remaining, axis=-1)                     # [N]
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)       # [N, E]
+        gate = (probs * onehot).sum(-1)                          # [N]
+        topk_gate_sum = topk_gate_sum + gate   # normalizer (pre-drop, as in
+        # position within expert: tokens before me choosing the same expert
+        pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot) + count_base[None]
+        pos = (pos_in_e * onehot).sum(-1)                        # [N]
+        keep = pos < C
+        pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[:, None]
+        disp = disp + onehot[:, :, None] * pos_oh[:, None, :]
+        comb = comb + gate[:, None, None] * onehot[:, :, None] * pos_oh[:, None, :]
+        count_base = count_base + onehot.sum(0)
+        remaining = remaining * (1.0 - onehot)
+
+    # renormalize by the full top-k gate mass (matches the argsort path)
+    comb = comb / jnp.maximum(topk_gate_sum, 1e-9)[:, None, None]
+    buf = jnp.einsum("nec,nd->ecd", disp.astype(xf.dtype), xf)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    out_buf = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["wd"])
+    y = jnp.einsum("nec,ecd->nd", comb.astype(xf.dtype), out_buf)
+    if "shared" in p:
+        y = y + ffn(act, xf, p["shared"])
+    return y
+
+
+def _moe_tokens(x: jax.Array, p: Dict, mcfg: MoEConfig, act: str) -> jax.Array:
+    B, T, D = x.shape
+    N = B * T
+    E, K = mcfg.n_experts, mcfg.top_k
+    C = capacity(N, mcfg)
+    xf = x.reshape(N, D)
+
+    # --- routing (fp32) ---
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                 # [N, K]
+    gate = gate / (gate.sum(-1, keepdims=True) + 1e-9)   # renormalize top-k
+
+    # --- dispatch: sort (token,k) pairs by expert, rank within expert ---
+    flat_e = eidx.reshape(-1)                            # [N*K]
+    order = jnp.argsort(flat_e)                          # stable
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))   # [E]
+    rank = jnp.arange(N * K) - starts[sorted_e]          # position within expert
+    keep = rank < C
+    rank_c = jnp.minimum(rank, C - 1)
+    tok = order // K                                     # source token per pair
+
+    buf = jnp.zeros((E, C, D), x.dtype)
+    vals = xf[tok] * keep[:, None].astype(x.dtype)
+    buf = buf.at[sorted_e, rank_c].set(vals, mode="drop")
+
+    # --- expert FFN (batched over E; EP shards this einsum over 'model') ---
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    out_buf = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["wd"])
+
+    # --- combine: gather back, unsort, weight by gates ---
+    y_pairs_sorted = out_buf[sorted_e, rank_c] * keep[:, None].astype(x.dtype)
+    y_pairs = jnp.zeros((N * K, D), x.dtype).at[order].set(y_pairs_sorted)
+    y = (y_pairs.reshape(N, K, D)
+         * gate.reshape(N, K, 1).astype(x.dtype)).sum(axis=1)
+
+    if "shared" in p:
+        y = y + ffn(act, xf, p["shared"])
+    return y.reshape(B, T, D)
+
+
+def aux_load_balance_loss(x: jax.Array, p: Dict, mcfg: MoEConfig) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (mean over batch)."""
+    N = x.shape[0] * x.shape[1]
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32)).reshape(N, -1)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, eidx = jax.lax.top_k(probs, mcfg.top_k)
+    onehot = jax.nn.one_hot(eidx, mcfg.n_experts).sum(1)          # [N, E]
+    frac_tokens = onehot.mean(0) / mcfg.top_k    # normalized: uniform -> 1/E
+    frac_probs = probs.mean(0)
+    return mcfg.n_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,135 @@
+"""AdamW + schedules + global-norm clipping, pure JAX (no optax dependency).
+
+Mixed precision: params may be bf16; moments kept in `moment_dtype`
+(fp32 default; bf16 for the 1T-param MoE to fit ZeRO-1 on 512 chips —
+DESIGN.md §4); the update math runs in fp32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"
+    # Adafactor-style factored second moment for >=2D leaves: v is stored as
+    # row/col running means (O(n+m) instead of O(n*m)) — required to fit the
+    # 1T-param MoE's optimizer state on 512 chips (DESIGN.md §4)
+    factored_v: bool = False
+
+
+def lr_schedule(ocfg: OptimConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(ocfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - ocfg.warmup_steps)
+                    / jnp.maximum(ocfg.total_steps - ocfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = ocfg.min_lr_ratio + (1 - ocfg.min_lr_ratio) * cos
+    return ocfg.lr * warm * scale
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def _is_factored(p, ocfg: OptimConfig) -> bool:
+    return ocfg.factored_v and p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def adamw_init(params: Any, ocfg: OptimConfig) -> Dict:
+    mdt = jnp.dtype(ocfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+
+    def v_init(p):
+        if _is_factored(p, ocfg):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return jnp.zeros(p.shape, mdt)
+
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(v_init, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params: Any, grads: Any, opt: Dict,
+                 ocfg: OptimConfig) -> Tuple[Any, Dict, Dict]:
+    """Returns (new_params, new_opt, metrics)."""
+    if ocfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, ocfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = opt["step"] + 1
+    lr = lr_schedule(ocfg, step)
+    b1, b2 = ocfg.b1, ocfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(ocfg.moment_dtype)
+
+    def new_m_fn(g, m):
+        return (b1 * m.astype(jnp.float32)
+                + (1 - b1) * g.astype(jnp.float32)).astype(mdt)
+
+    def new_v_fn(g, v):
+        g32 = g.astype(jnp.float32)
+        if isinstance(v, dict):   # factored (Adafactor-style)
+            g2 = g32 * g32 + 1e-30
+            return {"vr": b2 * v["vr"] + (1 - b2) * g2.mean(-1),
+                    "vc": b2 * v["vc"] + (1 - b2) * g2.mean(-2)}
+        return (b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32).astype(mdt)
+
+    is_v_leaf = lambda x: isinstance(x, dict) and set(x) == {"vr", "vc"}
+    new_m = jax.tree_util.tree_map(new_m_fn, grads, opt["m"])
+
+    # v may contain factored {vr, vc} sub-dicts where params have one leaf:
+    # flatten with those as leaves so the structures line up
+    tu = jax.tree_util
+    g_leaves, g_def = tu.tree_flatten(grads)
+    v_leaves, _ = tu.tree_flatten(opt["v"], is_leaf=is_v_leaf)
+    new_v_leaves = [new_v_fn(g, v) for g, v in zip(g_leaves, v_leaves)]
+    new_v = tu.tree_unflatten(g_def, new_v_leaves)
+
+    def vhat_of(v):
+        if isinstance(v, dict):
+            vr, vc = v["vr"], v["vc"]
+            return (vr[..., None] * vc[..., None, :]
+                    / (vr.mean(-1)[..., None, None] + 1e-30)) / bc2
+        return v.astype(jnp.float32) / bc2
+
+    def new_p_fn(p, m, v):
+        mh = m.astype(jnp.float32) / bc1
+        delta = mh / (jnp.sqrt(vhat_of(v)) + ocfg.eps)
+        p32 = p.astype(jnp.float32)
+        return (p32 - lr * (delta + ocfg.weight_decay * p32)).astype(p.dtype)
+
+    p_leaves = tu.tree_leaves(params)
+    m_leaves = tu.tree_leaves(new_m)
+    new_p_leaves = [new_p_fn(p, m, v) for p, m, v in
+                    zip(p_leaves, m_leaves, new_v_leaves)]
+    new_params = tu.tree_unflatten(g_def, new_p_leaves)
+    new_opt = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_opt, {"lr": lr, "grad_norm": gnorm}

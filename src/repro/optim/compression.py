@@ -1,0 +1,74 @@
+"""Int8 error-feedback gradient compression for cross-pod reduction.
+
+The cross-pod ICI/DCN hop is the slowest link in a multi-pod mesh; gradients
+tolerate aggressive quantization if the quantization error is fed back into
+the next step (error-feedback / EF-SGD). Scheme per leaf:
+
+  g_eff = g + e_prev                 (error feedback)
+  q, scale = quantize_int8(g_eff)    (per-tile max-abs scaling)
+  e_next = g_eff - dequant(q, scale) (local; carried in opt state)
+  sync: all-reduce/all-gather of q (1 byte/elem) + scales (fp32/tile)
+        instead of bf16/fp32 full gradients -> 2-4x wire-byte reduction
+        on the cross-pod axis.
+
+`compressed_psum` implements the sync inside shard_map over a named axis:
+int8 all-gather + local dequant-sum (int8 summation would overflow), which
+costs (n-1)/n * bytes * 1 per device vs 2 * (n-1)/n * bytes * 2 for a bf16
+ring all-reduce — ~4x wire reduction for n=2 pods.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+TILE = 256
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tile symmetric int8 quantization along the last axis.
+    Returns (q int8 [..., n], scale fp32 [..., n/TILE])."""
+    shape = x.shape
+    n = shape[-1]
+    pad = (-n) % TILE
+    xf = x.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    t = xf.reshape(shape[:-1] + (-1, TILE))
+    scale = jnp.max(jnp.abs(t), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(t / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(shape[:-1] + (n + pad,))[..., :n + pad], scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, n: int) -> jax.Array:
+    t = q.reshape(q.shape[:-1] + (-1, TILE)).astype(jnp.float32)
+    x = (t * scale[..., None]).reshape(q.shape[:-1] + (-1,))
+    return x[..., :n]
+
+
+def ef_compress(g: jax.Array, err: jax.Array):
+    """One error-feedback round trip (local). Returns (g_hat, new_err)."""
+    g_eff = g.astype(jnp.float32) + err
+    q, s = quantize_int8(g_eff)
+    g_hat = dequantize_int8(q, s, g.shape[-1]).astype(g.dtype)
+    return g_hat, (g_eff - g_hat.astype(jnp.float32))
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Quantized cross-axis sum (use inside shard_map): all-gather int8 +
+    scales, dequantize and sum locally."""
+    n = x.shape[-1]
+    q, s = quantize_int8(x)
+    q_all = jax.lax.all_gather(q, axis_name)          # [n_dev, ..., n_pad]
+    s_all = jax.lax.all_gather(s, axis_name)
+    deq = jax.vmap(lambda qq, ss: dequantize_int8(qq, ss, n))(q_all, s_all)
+    return jnp.sum(deq, axis=0).astype(x.dtype)
+
+
+def wire_bytes_ratio(n_devices: int) -> float:
+    """Wire bytes of compressed_psum vs bf16 ring all-reduce (per device)."""
+    ag = (n_devices - 1) / n_devices * (1 + 4 / TILE)     # int8 + scales
+    ar = 2 * (n_devices - 1) / n_devices * 2              # bf16 ring AR
+    return ag / ar

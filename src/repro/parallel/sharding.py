@@ -1,0 +1,224 @@
+"""Sharding rules: path-based PartitionSpecs for params, optimizer state
+(ZeRO-1), batches, and decode states.
+
+Axes: 'pod' (outer DP, multi-pod only), 'data' (DP), 'model' (TP/EP).
+Rules only annotate *arguments*; internal activations are propagated by
+GSPMD. Dims that do not divide the axis size fall back to replication —
+GSPMD stays correct and the roofline/HLO makes the cost visible (the §Perf
+hillclimb then fixes the ones that matter, e.g. qwen2.5's 40 heads).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def tp_size(mesh: Mesh) -> int:
+    return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+
+
+def batch_axes(mesh: Mesh, batch: int):
+    """Largest prefix of dp axes whose product divides the batch."""
+    axes = []
+    prod = 1
+    for a in dp_axes(mesh):
+        if batch % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def _path_names(path) -> list:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(f"[{k.idx}]")
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+    return names
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_leaf_spec(names, shape, tp: int) -> P:
+    """PartitionSpec for one parameter leaf, ignoring any stacked leading dim
+    (caller prepends None for stacked pattern/enc-block params)."""
+    if tp <= 1:   # no 'model' axis in this mesh (e.g. pure stage meshes)
+        return P(*([None] * len(shape)))
+    last = names[-1]
+    in_mem = "mem" in names
+    in_moe = "moe" in names
+    in_mixer = "mixer" in names
+
+    if last == "embed":
+        if _div(shape[0], tp):
+            return P("model", None)
+        return P(None, "model") if _div(shape[1], tp) else P(None, None)
+    if last == "head":
+        if _div(shape[1], tp):
+            return P(None, "model")
+        return P("model", None) if _div(shape[0], tp) else P(None, None)
+    if last in ("mem_tokens", "pos_embed", "pos", "router"):
+        return P(*([None] * len(shape)))
+
+    if in_moe and "shared" not in names and last in ("wg", "wu", "wd"):
+        E = shape[0]
+        if _div(E, tp):
+            return P("model", None, None)          # expert parallelism
+        # fall back: shard the FFN hidden dim
+        if last in ("wg", "wu"):
+            return P(None, None, "model") if _div(shape[2], tp) else P(None, None, None)
+        return P(None, "model", None) if _div(shape[1], tp) else P(None, None, None)
+
+    if in_mem:
+        if last == "wv" and _div(shape[1], tp):
+            return P(None, "model")
+        return P(*([None] * len(shape)))           # wq/wk/wb tiny -> replicate
+
+    if in_mixer:
+        table = {
+            "in_proj": P(None, "model"), "conv_w": P(None, "model"),
+            "x_proj": P("model", None), "dt_proj": P(None, "model"),
+            "A_log": P("model", None), "out_proj": P("model", None),
+            "D": P("model"), "conv_b": P("model"), "dt_bias": P("model"),
+        }
+        spec = table.get(last, P(*([None] * len(shape))))
+        # verify divisibility on each sharded dim; else replicate
+        for d, ax in enumerate(spec):
+            if ax is not None and not _div(shape[d], tp):
+                return P(*([None] * len(shape)))
+        return spec
+
+    # attention / dense FFN projections
+    if last in ("wq", "wk", "wv", "wg", "wu", "wi"):   # column parallel
+        return P(None, "model") if _div(shape[1], tp) else P(None, None)
+    if last in ("wo", "wd"):                           # row parallel
+        return P("model", None) if _div(shape[0], tp) else P(None, None)
+    return P(*([None] * len(shape)))                   # norms, biases, misc
+
+
+def param_specs(params_shape: Any, mesh: Mesh, *, fsdp: bool = False,
+                stacked_axis: str = None) -> Any:
+    """Tree of NamedSharding matching a (ShapeDtypeStruct) param tree.
+
+    fsdp=True additionally shards the first replicated, dp-divisible dim of
+    every leaf over the DP axes (ZeRO-3/FSDP — required to fit the 1T-param
+    MoE and the 398B hybrid; GSPMD inserts the per-layer all-gathers).
+
+    stacked_axis: shard the stacked per-layer dim of pattern params over this
+    mesh axis — the 'diagonal-as-pipeline' slot sharding (DESIGN.md §6.2)."""
+    tp = tp_size(mesh)
+    dp = dp_axes(mesh)
+    dsz = dp_size(mesh)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        stacked = ("pattern" in names) or ("enc" in names and "blocks" in names)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        spec = list(param_leaf_spec(names, shape, tp))
+        if stacked:
+            ax = (stacked_axis if stacked_axis
+                  and _div(leaf.shape[0], mesh.shape[stacked_axis]) else None)
+            spec = [ax] + spec
+        if fsdp and dp:
+            for d in range(len(leaf.shape)):
+                if spec[d] is None and _div(leaf.shape[d], dsz):
+                    spec[d] = dp if len(dp) > 1 else dp[0]
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def zero1_specs(params_shape: Any, mesh: Mesh) -> Any:
+    """Optimizer-moment shardings: the param spec + the first replicated,
+    divisible dim additionally sharded over the DP axes (ZeRO-1)."""
+    return param_specs(params_shape, mesh, fsdp=True)
+
+
+def opt_state_specs(opt_shape: Any, params_shape: Any, mesh: Mesh, *,
+                    zero1: bool = True) -> Any:
+    """Shardings for the optimizer state tree. Handles Adafactor-style
+    factored second moments (leaves named vr/vc are small -> replicated)."""
+    base = (zero1_specs(params_shape, mesh) if zero1
+            else param_specs(params_shape, mesh))
+    rep = NamedSharding(mesh, P())
+    v_shape = opt_shape["v"]
+    flat_base = {tuple(_path_names(p)): s for p, s in
+                 jax.tree_util.tree_flatten_with_path(base)[0]}
+
+    def one_v(path, leaf):
+        names = _path_names(path)
+        if names and names[-1] in ("vr", "vc"):
+            return rep
+        key = tuple(names)
+        return flat_base.get(key, rep)
+
+    v_specs = jax.tree_util.tree_map_with_path(one_v, v_shape)
+    return {"m": base, "v": v_specs, "step": rep}
+
+
+def batch_specs(mesh: Mesh, batch_shape: Any) -> Any:
+    """Shardings for a batch dict of arrays whose dim 0 is the batch."""
+    def one(leaf):
+        ax = batch_axes(mesh, leaf.shape[0])
+        return NamedSharding(mesh, P(ax, *([None] * (len(leaf.shape) - 1))))
+    return jax.tree_util.tree_map(one, batch_shape)
+
+
+def decode_state_specs(state_shape: Any, mesh: Mesh, batch: int) -> Any:
+    """Shardings for decode state trees (k/v caches, A/z, ssm h/conv, pos)."""
+    tp = tp_size(mesh)
+    bax = batch_axes(mesh, batch)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        last = names[-1]
+        if last == "pos":
+            return NamedSharding(mesh, P())
+        stacked = "pattern" in names
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        if last in ("k", "v", "ck", "cv"):          # [B, S, kv, hd]
+            if _div(shape[2], tp):
+                spec = [bax, None, "model", None]
+            else:
+                # kv heads don't divide TP: shard the *sequence* dim of the
+                # cache instead (a 32k cache replicated 16x would blow HBM)
+                spec = [bax, "model" if _div(shape[1], tp) else None,
+                        None, None]
+        elif last == "A":                           # [B, P, dv]
+            spec = [bax, None, "model" if _div(shape[2], tp) else None]
+        elif last == "z":                           # [B, P]
+            spec = [bax, None]
+        elif last == "h":                           # [B, dI, dS]
+            spec = [bax, "model" if _div(shape[1], tp) else None, None]
+        elif last == "conv":                        # [B, dc-1, dI]
+            spec = [bax, None, "model" if _div(shape[2], tp) else None]
+        else:
+            spec = [bax] + [None] * (len(shape) - 1)
+        if stacked:
+            spec = [None] + spec
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

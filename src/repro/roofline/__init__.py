@@ -1,0 +1,4 @@
+from repro.roofline.analysis import (CollectiveStats, HloAnalyzer, Roofline,
+                                     collect_collectives, roofline_terms,
+                                     shape_bytes, wire_bytes)
+from repro.roofline.model_math import model_flops, param_counts

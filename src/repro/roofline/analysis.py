@@ -1,0 +1,356 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+  compute_term    = HLO_FLOPs / peak_FLOP/s          (per device)
+  memory_term     = HLO_bytes / HBM_bw               (per device)
+  collective_term = collective_wire_bytes / link_bw  (per device)
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE,
+so for scan-based models (every executor here is a scan) it undercounts by
+the trip count. We therefore walk the post-SPMD HLO text ourselves:
+
+  * build the call graph (ENTRY -> while bodies / calls / conditionals) and
+    propagate an execution-count multiplier (trip counts parsed from each
+    while condition's loop bound constant);
+  * FLOPs: every ``dot`` op = 2 * prod(out_shape) * prod(contracted dims),
+    times its computation's multiplier (fusion bodies are traversed for dots
+    too — XLA does not fuse dots away);
+  * bytes: materialized-op outputs (fusions counted as one op, internals
+    skipped) * 2 (write + subsequent read), times multiplier. This is an
+    estimate: CPU lowering upcasts bf16 dots to f32 (TPU would not), so the
+    memory term carries ~2x uncertainty — documented in EXPERIMENTS.md.
+  * collectives: all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute output bytes -> ring-algorithm wire bytes, times
+    multiplier, with replica-group sizes parsed per op.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ops whose outputs we do not count as memory traffic
+_BYTES_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "while", "conditional", "call", "after-all", "token",
+    "partition-id", "replica-id", "iota", "convert", "copy-start",
+    "copy-done", "add-dependency", "domain", "opt-barrier",
+}
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class _Instr:
+    name: str
+    op: str
+    out_shape: str
+    line: str
+
+
+class HloAnalyzer:
+    def __init__(self, hlo: str, total_devices: int):
+        self.total_devices = total_devices
+        self.comps: Dict[str, List[_Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo)
+        self.mult = self._multipliers()
+
+    # ---------------- parsing ----------------
+
+    _COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+    _INSTR_RE = re.compile(
+        r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+        r"((?:\([^)]*\))|(?:(?:[a-z]+[0-9]*|pred)\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+        r"([\w\-]+)\(")
+
+    def _parse(self, hlo: str) -> None:
+        cur: Optional[str] = None
+        for line in hlo.splitlines():
+            if not line.startswith(" ") and "{" in line and "->" in line:
+                m = self._COMP_RE.match(line.strip())
+                if m:
+                    cur = m.group(2)
+                    self.comps[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                    continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = self._INSTR_RE.match(line)
+            if m:
+                self.comps[cur].append(
+                    _Instr(m.group(1), m.group(3), m.group(2), line))
+
+    def _trip_count(self, cond_comp: str) -> int:
+        """Loop bound: the largest integer constant in the condition body."""
+        best = 1
+        for ins in self.comps.get(cond_comp, []):
+            if ins.op == "constant":
+                c = re.search(r"constant\((\d+)\)", ins.line)
+                if c:
+                    best = max(best, int(c.group(1)))
+        return best
+
+    def _multipliers(self) -> Dict[str, float]:
+        """Execution count per computation, from ENTRY through whiles/calls."""
+        mult: Dict[str, float] = {}
+        if self.entry is None:
+            return mult
+        stack: List[Tuple[str, float]] = [(self.entry, 1.0)]
+        while stack:
+            comp, m = stack.pop()
+            mult[comp] = mult.get(comp, 0.0) + m
+            for ins in self.comps.get(comp, []):
+                if ins.op == "while":
+                    cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                    bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+                    if cm and bm:
+                        trips = self._trip_count(cm.group(1))
+                        stack.append((bm.group(1), m * trips))
+                elif ins.op == "call":
+                    tm = re.search(r"to_apply=%?([\w.\-]+)", ins.line)
+                    if tm:
+                        stack.append((tm.group(1), m))
+                elif ins.op == "conditional":
+                    for br in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                         r"(?:true|false)_computation=%?([\w.\-]+))",
+                                         ins.line):
+                        names = (br[0] or br[1]).split(",")
+                        for n in names:
+                            n = n.strip().lstrip("%")
+                            if n:
+                                stack.append((n, m))  # upper bound: both branches
+        return mult
+
+    def _fusion_callees(self) -> Dict[str, float]:
+        """Multipliers for fusion computations (for dot counting inside them)."""
+        out: Dict[str, float] = {}
+        for comp, m in self.mult.items():
+            for ins in self.comps.get(comp, []):
+                if ins.op == "fusion":
+                    cm = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                    if cm:
+                        out[cm.group(1)] = out.get(cm.group(1), 0.0) + m
+        return out
+
+    # ---------------- metrics ----------------
+
+    def flops(self) -> float:
+        comp_mults = dict(self.mult)
+        for c, m in self._fusion_callees().items():
+            comp_mults[c] = comp_mults.get(c, 0.0) + m
+        total = 0.0
+        for comp, m in comp_mults.items():
+            for ins in self.comps.get(comp, []):
+                if ins.op not in ("dot", "convolution"):
+                    continue
+                out_elems = 1
+                for d in _shape_dims(ins.out_shape):
+                    out_elems *= d
+                if ins.op == "dot":
+                    om = re.search(r"dot\(([^)]*)\)", ins.line)
+                    lhs_dims: List[int] = []
+                    if om:
+                        shapes = _SHAPE_RE.findall(om.group(1))
+                        # operand list may or may not embed shapes; fall back
+                        if shapes:
+                            dims = shapes[0][1]
+                            lhs_dims = ([int(d) for d in dims.split(",")]
+                                        if dims else [])
+                    if not lhs_dims:
+                        # operands given as %refs only: find producer shape
+                        ref = re.search(r"dot\(%?([\w.\-]+)", ins.line)
+                        lhs_dims = self._producer_dims(comp, ref.group(1)) if ref else []
+                    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+                    k = 1
+                    if cm and cm.group(1) and lhs_dims:
+                        for ci in cm.group(1).split(","):
+                            ci = int(ci)
+                            if ci < len(lhs_dims):
+                                k *= lhs_dims[ci]
+                    total += 2.0 * out_elems * k * m
+                else:  # convolution: 2 * out * kernel_elems_per_output
+                    km = re.search(r"convolution\(([^)]*)\)", ins.line)
+                    kshape = _SHAPE_RE.findall(km.group(1))[-1] if km else None
+                    kelems = 1
+                    if kshape and kshape[1]:
+                        for d in kshape[1].split(","):
+                            kelems *= int(d)
+                    total += 2.0 * out_elems * kelems * m
+        return total
+
+    def _producer_dims(self, comp: str, ref: str) -> List[int]:
+        for ins in self.comps.get(comp, []):
+            if ins.name == ref:
+                return _shape_dims(ins.out_shape)
+        return []
+
+    def bytes_accessed(self, *, exclude_seq_sq: int = 0) -> float:
+        """exclude_seq_sq=T: drop ops whose trailing two dims are both T —
+        the attention-score chain, which the (validated) Pallas flash kernel
+        keeps in VMEM on TPU. Used for the flash-adjusted memory term."""
+        total = 0.0
+        for comp, m in self.mult.items():
+            for ins in self.comps.get(comp, []):
+                if ins.op in _BYTES_SKIP or ins.op in _COLL_KINDS:
+                    continue
+                if exclude_seq_sq:
+                    dims = _shape_dims(ins.out_shape)
+                    if (len(dims) >= 2 and dims[-1] == exclude_seq_sq
+                            and dims[-2] == exclude_seq_sq):
+                        continue
+                if ins.op == "dynamic-update-slice":
+                    # in-place update (donated/aliased buffers): traffic is
+                    # the written slice, not the whole buffer
+                    ops = re.search(r"dynamic-update-slice\(([^)]*)\)", ins.line)
+                    b = 0
+                    if ops:
+                        shapes = _SHAPE_RE.findall(ops.group(1))
+                        if len(shapes) >= 2:
+                            dt, dims = shapes[1]
+                            n = 1
+                            for d in (dims.split(",") if dims else []):
+                                n *= int(d)
+                            b = n * _DTYPE_BYTES.get(dt, 0)
+                        else:
+                            refs = re.findall(r"%?([\w.\-]+)",
+                                              ops.group(1))
+                            if len(refs) >= 2:
+                                dims = self._producer_dims(comp, refs[1])
+                                n = 1
+                                for d in dims:
+                                    n *= d
+                                b = n * 4
+                    total += 2.0 * b * m
+                    continue
+                total += 2.0 * shape_bytes(ins.out_shape) * m
+        return total
+
+    def collectives(self) -> "CollectiveStats":
+        stats = CollectiveStats()
+        for comp, m in self.mult.items():
+            for ins in self.comps.get(comp, []):
+                kind = None
+                for k in _COLL_KINDS:
+                    if ins.op == k or ins.op == k + "-start":
+                        kind = k
+                        break
+                if kind is None:
+                    continue
+                out_b = shape_bytes(ins.out_shape)
+                group = _group_size(ins.line, self.total_devices)
+                wb = wire_bytes(kind, out_b, group) * m
+                stats.per_op[kind] = stats.per_op.get(kind, 0.0) + wb
+                stats.count[kind] = stats.count.get(kind, 0) + int(m)
+                stats.total_wire_bytes += wb
+        return stats
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def wire_bytes(kind: str, out_bytes: int, group: int) -> float:
+    """Per-device ICI wire bytes for ring algorithms."""
+    if group <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (group - 1) / group * out_bytes
+    if kind == "all-gather":          # out = gathered full buffer
+        return (group - 1) / group * out_bytes
+    if kind == "reduce-scatter":      # out = local shard
+        return (group - 1) * out_bytes
+    if kind == "all-to-all":
+        return (group - 1) / group * out_bytes
+    if kind == "collective-permute":
+        return float(out_bytes)
+    return float(out_bytes)
+
+
+@dataclass
+class CollectiveStats:
+    per_op: Dict[str, float] = field(default_factory=dict)
+    count: Dict[str, int] = field(default_factory=dict)
+    total_wire_bytes: float = 0.0
+
+
+def collect_collectives(hlo: str, total_devices: int) -> CollectiveStats:
+    return HloAnalyzer(hlo, total_devices).collectives()
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    roofline_fraction: float
+
+    def to_dict(self):
+        return self.__dict__.copy()
+
+
+def roofline_terms(analyzer: HloAnalyzer, n_devices: int,
+                   model_flops: float) -> Roofline:
+    flops_dev = analyzer.flops()
+    bytes_dev = analyzer.bytes_accessed()
+    coll = analyzer.collectives()
+    wire_dev = coll.total_wire_bytes
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    collective_s = wire_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_flops = flops_dev * n_devices
+    useful = model_flops / total_flops if total_flops else 0.0
+    # fraction of roofline: useful-FLOPs time at peak over the bound term sum
+    ideal_s = (model_flops / n_devices) / PEAK_FLOPS_BF16
+    bound_s = max(terms.values())
+    frac = ideal_s / bound_s if bound_s > 0 else 0.0
+    return Roofline(flops_dev, bytes_dev, wire_dev, compute_s, memory_s,
+                    collective_s, dominant, model_flops, useful, frac)

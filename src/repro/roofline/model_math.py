@@ -1,0 +1,55 @@
+"""Analytic parameter counts and MODEL_FLOPS (6*N*D train / 2*N*D inference,
+N = active params for MoE) — the 'useful FLOPs' reference for the roofline."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.models.model import param_specs
+
+
+def _leaf_count(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+
+
+def param_counts(cfg: ArchConfig) -> Tuple[int, int]:
+    """(total_params, active_params_per_token)."""
+    shapes = param_specs(cfg)
+    total = _leaf_count(shapes)
+    active = total
+    if cfg.moe is not None:
+        # routed experts: only top_k of n_experts are active per token
+        flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        routed = sum(int(np.prod(l.shape)) for path, l in flat
+                     if any(getattr(k, "key", None) == "moe" for k in path)
+                     and str(getattr(path[-1], "key", "")) in ("wg", "wu", "wd"))
+        active = total - routed + int(routed * cfg.moe.top_k / cfg.moe.n_experts)
+    return total, active
+
+
+def embedding_params(cfg: ArchConfig) -> int:
+    n = cfg.vocab * cfg.d_model
+    if not cfg.tie_embeddings:
+        n *= 2
+    return n
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Useful model FLOPs for one step of this cell (whole-job, all devices).
+
+    train:   6 * N_active * tokens   (fwd 2ND + bwd 4ND)
+    prefill: 2 * N_active * tokens
+    decode:  2 * N_active * batch    (one token per sequence)
+    Embedding-table params are excluded from N (lookup, not matmul); the
+    unembedding projection is included.
+    """
+    total, active = param_counts(cfg)
+    n = active - cfg.vocab * cfg.d_model   # exclude the lookup table
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,120 @@
+"""Batched long-context serving engine.
+
+Prefill uses the *diagonal* schedule over full segments (the paper's win:
+one long request keeps the GPU/TPU busy without cross-request batching),
+then transplants the executor's per-layer memory states into the decode
+state; the prompt tail and new tokens run through `decode_step`, with ARMT
+segment flushes at segment boundaries (constant memory in context length).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.models import (decode_state_init, decode_step, flush_segment,
+                          forward_hidden, last_logits)
+
+
+def _transplant(fin: Dict, dstate: Dict) -> Dict:
+    """Copy recurrent state (A/z/h/conv) from executor final state into the
+    decode state (which additionally holds kv caches and pos)."""
+    def merge_one(src: Dict, dst: Dict) -> Dict:
+        out = dict(dst)
+        for k in ("A", "z", "h", "conv"):
+            if k in src:
+                out[k] = src[k].astype(dst[k].dtype) if hasattr(dst.get(k), "dtype") else src[k]
+        return out
+
+    new_prelude = tuple(merge_one(s, d) for s, d in
+                        zip(fin["prelude"], dstate["prelude"]))
+    new_pattern = tuple(merge_one(s, d) for s, d in
+                        zip(fin["pattern"], dstate["pattern"]))
+    return {"prelude": new_prelude, "pattern": new_pattern,
+            "pos": dstate["pos"]}
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray          # [B, max_new]
+    prefill_segments: int
+    schedule: str
+
+
+class ServeEngine:
+    """Compile-once engine for a fixed (batch, prompt_len, max_new) shape.
+
+    serve_mode 'armt': constant-memory decode (paper Fig. 1); 'cache':
+    standard full-KV decoding for the baseline comparison.
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *, serve_mode: str = "armt",
+                 schedule: str = "diagonal", max_len: int = 8192):
+        self.params = params
+        self.cfg = cfg
+        self.serve_mode = serve_mode
+        self.schedule = schedule
+        self.max_len = max_len
+        self.seg_len = cfg.armt.segment_len if cfg.armt else 1024
+        self._step = jax.jit(
+            lambda p, s, t: decode_step(p, cfg, s, t, serve_mode=serve_mode))
+        self._flush = jax.jit(
+            lambda p, s: flush_segment(p, cfg, s)) if cfg.armt else None
+
+    def prefill(self, prompts: jax.Array, enc_frames=None):
+        """prompts: [B, P]. Returns (next_token_logits, decode_state)."""
+        B, P = prompts.shape
+        dtype = self.params["embed"].dtype
+        dstate = decode_state_init(self.cfg, B, serve_mode=self.serve_mode,
+                                   max_len=self.max_len, dtype=dtype)
+        n_full = P // self.seg_len if self.serve_mode == "armt" else 0
+        logits = None
+        if n_full > 0:
+            hidden, fin = forward_hidden(
+                self.params, self.cfg, prompts[:, :n_full * self.seg_len],
+                schedule=self.schedule, enc_frames=enc_frames)
+            dstate = _transplant(fin, dstate)
+            logits = last_logits(self.params, self.cfg, hidden)
+        tail = prompts[:, n_full * self.seg_len:]
+        if tail.shape[1] > 0:
+            logits, dstate = self._chunk(dstate, tail)
+        return logits, dstate
+
+    def _chunk(self, dstate, toks):
+        """Feed a multi-token chunk, flushing at ARMT segment boundaries."""
+        logits = None
+        t = 0
+        T = toks.shape[1]
+        while t < T:
+            room = (self.seg_len - int(dstate["pos"])
+                    if self.serve_mode == "armt" else T - t)
+            take = min(room, T - t)
+            logits, dstate = self._step(self.params, dstate,
+                                        toks[:, t:t + take])
+            t += take
+            if (self.serve_mode == "armt" and self.cfg.armt
+                    and int(dstate["pos"]) >= self.seg_len):
+                dstate = self._flush(self.params, dstate)
+        return logits, dstate
+
+    def generate(self, prompts: jax.Array, max_new: int,
+                 enc_frames=None) -> GenerationResult:
+        logits, dstate = self.prefill(prompts, enc_frames=enc_frames)
+        B = prompts.shape[0]
+        out = np.zeros((B, max_new), np.int32)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in range(max_new):
+            out[:, i] = np.asarray(tok)
+            if i == max_new - 1:
+                break
+            logits, dstate = self._step(self.params, dstate, tok)
+            if (self.serve_mode == "armt" and self.cfg.armt
+                    and int(dstate["pos"]) >= self.seg_len):
+                dstate = self._flush(self.params, dstate)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return GenerationResult(out, prompts.shape[1] // self.seg_len,
+                                self.schedule)

@@ -1,0 +1,2 @@
+from repro.train.state import (init_train_state, train_state_specs,
+                               make_train_step)

@@ -1,0 +1,113 @@
+"""Fault-tolerant training loop.
+
+Features (DESIGN.md §4): auto-resume from the latest checkpoint, periodic
+atomic keep-k checkpoints (async), preemption (SIGTERM/SIGINT) -> final
+checkpoint, non-finite step skipping (inside train_step), step-time watchdog
+for straggler detection, deterministic data resume from the step counter.
+"""
+from __future__ import annotations
+
+import json
+import signal
+import time
+from pathlib import Path
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ArchConfig
+from repro.data import shard_batch
+from repro.optim import OptimConfig
+from repro.train.state import init_train_state, make_train_step
+
+
+class Watchdog:
+    """Flags steps exceeding `factor` x the median step time (straggler /
+    hang detection; on a real cluster this triggers re-slicing)."""
+
+    def __init__(self, factor: float = 3.0):
+        self.times = []
+        self.factor = factor
+
+    def observe(self, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) < 5:
+            return False
+        med = float(np.median(self.times[-50:]))
+        return dt > self.factor * med
+
+
+def train_loop(cfg: ArchConfig, ocfg: OptimConfig, data: Iterator[Dict],
+               *, steps: int, ckpt_dir: Optional[str] = None,
+               schedule: str = "auto", mode: str = "segmented",
+               microbatches: int = 1, mesh=None, ckpt_every: int = 100,
+               log_every: int = 10, seed: int = 0,
+               log_fn: Callable[[Dict], None] = None,
+               resume: bool = True) -> Dict:
+    """Returns the final state dict and a history of metrics."""
+    step_fn = jax.jit(make_train_step(cfg, ocfg, schedule=schedule, mode=mode,
+                                      microbatches=microbatches),
+                      donate_argnums=(0,))
+    state = init_train_state(cfg, ocfg, jax.random.PRNGKey(seed))
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    if mgr and resume and mgr.latest_step() is not None:
+        state = mgr.restore(state)
+        start_step = mgr.latest_step()
+        print(f"[train] resumed from step {start_step}", flush=True)
+
+    stop = {"flag": False}
+
+    def _on_signal(sig, frame):
+        stop["flag"] = True
+
+    old_handlers = {}
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            old_handlers[sig] = signal.signal(sig, _on_signal)
+        except ValueError:
+            pass   # not the main thread
+
+    wd = Watchdog()
+    history = []
+    log_path = Path(ckpt_dir) / "metrics.jsonl" if ckpt_dir else None
+    it = iter(data)
+    # fast-forward the deterministic stream on resume
+    for _ in range(start_step):
+        next(it)
+
+    step = start_step
+    try:
+        for step in range(start_step, steps):
+            batch = shard_batch(next(it), mesh)
+            batch.pop("answer", None)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            metrics.update(step=step, step_time_s=round(dt, 4))
+            if wd.observe(dt):
+                metrics["straggler"] = True
+                print(f"[watchdog] step {step} took {dt:.2f}s "
+                      f"(>{wd.factor}x median)", flush=True)
+            history.append(metrics)
+            if log_path:
+                with open(log_path, "a") as f:
+                    f.write(json.dumps(metrics) + "\n")
+            if log_fn and step % log_every == 0:
+                log_fn(metrics)
+            if mgr and (step + 1) % ckpt_every == 0:
+                mgr.save(step + 1, state)
+            if stop["flag"]:
+                print(f"[train] preemption signal at step {step}; "
+                      "checkpointing and exiting", flush=True)
+                break
+    finally:
+        if mgr:
+            mgr.save(step + 1, state, block=True)
+        for sig, h in old_handlers.items():
+            signal.signal(sig, h)
+    return {"state": state, "history": history, "last_step": step + 1}

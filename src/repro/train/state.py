@@ -1,0 +1,70 @@
+"""TrainState + step builder: value_and_grad through the segmented executor,
+microbatch gradient accumulation, non-finite step skipping (fault tolerance),
+AdamW update."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import init_params, lm_loss
+from repro.optim import OptimConfig, adamw_init, adamw_update
+
+
+def init_train_state(cfg: ArchConfig, ocfg: OptimConfig, key) -> Dict:
+    params = init_params(cfg, key)
+    return {"params": params, "opt": adamw_init(params, ocfg)}
+
+
+def train_state_specs(cfg: ArchConfig, ocfg: OptimConfig):
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, ocfg, k), jax.random.PRNGKey(0))
+
+
+def make_train_step(cfg: ArchConfig, ocfg: OptimConfig, *,
+                    schedule: str = "auto", mode: str = "segmented",
+                    microbatches: int = 1, skip_nonfinite: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def batch_loss(params, batch):
+        return lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                       schedule=schedule, mode=mode,
+                       loss_mask=batch.get("loss_mask"),
+                       enc_frames=batch.get("enc_frames"))
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(batch_loss)(params, batch)
+
+        def mb(carry, mb_batch):
+            loss_acc, g_acc = carry
+            l, g = jax.value_and_grad(batch_loss)(params, mb_batch)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(a.dtype), g_acc, g)
+            return (loss_acc + l, g_acc), None
+
+        split = jax.tree_util.tree_map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]), batch)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, gsum), _ = jax.lax.scan(mb, (jnp.float32(0), zeros), split)
+        g = jax.tree_util.tree_map(lambda x: x / microbatches, gsum)
+        return loss / microbatches, g
+
+    def train_step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        new_params, new_opt, metrics = adamw_update(
+            state["params"], grads, state["opt"], ocfg)
+        if skip_nonfinite:
+            ok = jnp.isfinite(loss) & jnp.isfinite(metrics["grad_norm"])
+            sel = lambda n, o: jnp.where(ok, n, o)
+            new_params = jax.tree_util.tree_map(sel, new_params, state["params"])
+            new_opt = jax.tree_util.tree_map(sel, new_opt, state["opt"])
+            metrics["skipped"] = (~ok).astype(jnp.float32)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,15 @@
+import os
+
+# Tests run single-device (the dry-run forces 512 separately, in its own
+# process). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,69 @@
+"""Checkpointing: roundtrip, atomicity, keep-k GC, corruption detection,
+resume."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(key, scale=1.0):
+    ks = jax.random.split(key, 3)
+    return {"a": jax.random.normal(ks[0], (4, 8)) * scale,
+            "nested": {"b": jax.random.normal(ks[1], (3,)) * scale,
+                       "t": (jax.random.normal(ks[2], (2, 2)),
+                             jnp.zeros((), jnp.int32))}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    tree = _tree(jax.random.PRNGKey(0))
+    mgr.save(7, tree)
+    got = mgr.restore(tree)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)), tree, got)
+    assert mgr.latest_step() == 7
+
+
+def test_keep_k(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    tree = _tree(jax.random.PRNGKey(0))
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_corruption_detected(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    tree = _tree(jax.random.PRNGKey(0))
+    mgr.save(1, tree)
+    # flip bytes in one leaf
+    leaf = next((tmp_path / "step_1").glob("leaf_0.npy"))
+    arr = np.load(leaf)
+    arr.ravel()[0] += 1
+    np.save(leaf, arr)
+    with pytest.raises(IOError, match="corruption"):
+        mgr.restore(tree)
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    tree = _tree(jax.random.PRNGKey(1))
+    mgr.save(5, tree)
+    mgr.wait()
+    got = mgr.restore(tree)
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.asarray(got["a"]))
+
+
+def test_restore_latest_of_many(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=10, async_save=False)
+    for s in (10, 20, 30):
+        mgr.save(s, _tree(jax.random.PRNGKey(s), scale=float(s)))
+    got = mgr.restore(_tree(jax.random.PRNGKey(0)))
+    want = _tree(jax.random.PRNGKey(30), scale=30.0)
+    np.testing.assert_allclose(np.asarray(got["a"]), np.asarray(want["a"]))

@@ -1,0 +1,48 @@
+"""Data pipeline: determinism, exact resume, needle-task structure."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import lm_stream, needle_qa
+from repro.data.synthetic import ANSWER, QUERY
+
+
+def test_lm_stream_deterministic():
+    a = next(lm_stream(256, 2, 32, seed=3))
+    b = next(lm_stream(256, 2, 32, seed=3))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = next(lm_stream(256, 2, 32, seed=4))
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_lm_stream_resume():
+    """start_step=k reproduces the k-th batch — exact data resume after a
+    restart (fault tolerance)."""
+    it = lm_stream(256, 2, 32, seed=0)
+    batches = [next(it) for _ in range(4)]
+    it2 = lm_stream(256, 2, 32, seed=0, start_step=3)
+    np.testing.assert_array_equal(batches[3]["tokens"],
+                                  next(it2)["tokens"])
+
+
+@given(st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_needle_structure(step):
+    it = needle_qa(512, 4, 64, seed=1, start_step=step)
+    b = next(it)
+    toks, labels, mask = b["tokens"], b["labels"], b["loss_mask"]
+    assert toks.shape == (4, 64)
+    # query comes right before the answer slot
+    assert (toks[:, -3] == QUERY).all()
+    assert (toks[:, -1] == ANSWER).all()
+    # loss mask selects exactly the answer position
+    assert mask.sum() == 4 and (mask[:, -1] == 1).all()
+    # the gold label at the answer position is the planted value
+    assert (labels[:, -1] == b["answer"]).all()
+    # the value actually appears earlier in the sequence (the needle)
+    for i in range(4):
+        assert b["answer"][i] in toks[i, :-3]
+
+
+def test_labels_are_shifted_tokens():
+    b = next(lm_stream(128, 2, 16, seed=0))
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])

@@ -1,0 +1,95 @@
+"""Serving-path consistency: prefill-via-forward == token-by-token decode,
+ARMT flush at segment boundaries, both serve modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import (decode_state_init, decode_step, flush_segment,
+                          init_params)
+from repro.serve import ServeEngine
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "falcon-mamba-7b",
+                                  "qwen2-moe-a2.7b"])
+def test_prefill_matches_decode(arch):
+    import dataclasses
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        # capacity drops depend on how many tokens are batched together
+        # (prefill batches a whole segment, decode sees one token) — use a
+        # dropless capacity factor so the schedules must agree exactly
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B = 2
+    seg = cfg.armt.segment_len if cfg.armt else 16
+    P = 2 * seg + seg // 2                       # two full segments + tail
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 8, cfg.vocab)
+
+    eng = ServeEngine(params, cfg, serve_mode="armt", schedule="diagonal",
+                      max_len=P + 8)
+    logits_a, _ = eng.prefill(prompts)
+
+    st = decode_state_init(cfg, B, serve_mode="armt", max_len=P + 8,
+                           dtype=jnp.float32)
+    logits_b = None
+    for t in range(P):
+        logits_b, st = decode_step(params, cfg, st, prompts[:, t],
+                                   serve_mode="armt")
+        if cfg.armt and int(st["pos"]) >= seg:
+            st = flush_segment(params, cfg, st)
+    rel = float(jnp.abs(logits_a - logits_b).max()
+                / (jnp.abs(logits_b).max() + 1e-9))
+    assert rel < 1e-3, f"{arch}: prefill/decode mismatch rel={rel}"
+    assert bool((jnp.argmax(logits_a, -1) == jnp.argmax(logits_b, -1)).all())
+
+
+def test_cache_mode_matches_full_forward():
+    """'cache' decode over a prompt == full-attention forward logits."""
+    import dataclasses
+    from repro.models import forward_hidden, last_logits
+    cfg = dataclasses.replace(get_smoke_config("h2o-danube-1.8b"), armt=None)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, P = 2, 24
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 8, cfg.vocab)
+    hidden, _ = forward_hidden(params, cfg, prompts, mode="full")
+    want = last_logits(params, cfg, hidden)
+
+    st = decode_state_init(cfg, B, serve_mode="cache", max_len=P + 4,
+                           dtype=jnp.float32)
+    got = None
+    for t in range(P):
+        got, st = decode_step(params, cfg, st, prompts[:, t],
+                              serve_mode="cache")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_generate_shapes_and_determinism():
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 40), 8, cfg.vocab)
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=64)
+    r1 = eng.generate(prompts, 8)
+    r2 = eng.generate(prompts, 8)
+    assert r1.tokens.shape == (2, 8)
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+
+
+def test_armt_decode_state_is_constant_in_context():
+    """Paper Fig. 1: ARMT serve state is O(1) in context length."""
+    from repro.utils import tree_bytes
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    s1 = jax.eval_shape(lambda: decode_state_init(
+        cfg, 4, serve_mode="armt", max_len=32_768, dtype=jnp.float32))
+    s2 = jax.eval_shape(lambda: decode_state_init(
+        cfg, 4, serve_mode="armt", max_len=524_288, dtype=jnp.float32))
+    assert tree_bytes(s1) == tree_bytes(s2)
+    c1 = jax.eval_shape(lambda: decode_state_init(
+        cfg, 4, serve_mode="cache", max_len=32_768, dtype=jnp.float32))
+    c2 = jax.eval_shape(lambda: decode_state_init(
+        cfg, 4, serve_mode="cache", max_len=524_288, dtype=jnp.float32))
+    assert tree_bytes(c2) > 10 * tree_bytes(c1)
+    assert tree_bytes(s1) < tree_bytes(c1)

@@ -1,0 +1,116 @@
+"""Per-kernel allclose sweeps (interpret mode) against the ref.py oracles,
+over shapes and dtypes, per the deliverable spec."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 5e-2}
+
+
+def _close(a, b, dtype):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32),
+        atol=ATOL[dtype], rtol=ATOL[dtype] * 10)
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N,Hq,Hkv,T,S,hd,causal,window", [
+    (2, 4, 4, 32, 32, 16, True, 0),       # MHA causal
+    (2, 4, 2, 64, 64, 32, True, 0),       # GQA
+    (1, 8, 1, 33, 33, 8, True, 0),        # MQA, ragged T
+    (2, 2, 2, 32, 32, 16, False, 0),      # bidirectional
+    (1, 4, 4, 64, 64, 16, True, 16),      # sliding window
+])
+def test_flash_attention(N, Hq, Hkv, T, S, hd, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(T + hd), 3)
+    q = jax.random.normal(ks[0], (N, Hq, T, hd), dtype)
+    k = jax.random.normal(ks[1], (N, Hkv, S, hd), dtype)
+    v = jax.random.normal(ks[2], (N, Hkv, S, hd), dtype)
+    out = ops.segment_attention(q, k, v, causal=causal, window=window,
+                                use_kernel=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    _close(out, want, dtype)
+
+
+# ---------------------------------------------------------------- grouped mm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("G,M,K,N", [(1, 16, 16, 16), (4, 96, 160, 224),
+                                     (7, 128, 64, 128), (2, 256, 512, 128)])
+def test_grouped_matmul(G, M, K, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(G * M + N), 2)
+    x = jax.random.normal(ks[0], (G, M, K), dtype)
+    w = jax.random.normal(ks[1], (G, K, N), dtype)
+    out = ops.grouped_gemm(x, w, use_kernel=True, interpret=True)
+    _close(out, ref.grouped_matmul_ref(x, w), dtype)
+
+
+# ---------------------------------------------------------------- armt
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("N,T,D,dm,Dv,M", [
+    (2, 32, 48, 8, 48, 4), (1, 16, 32, 4, 64, 8), (3, 64, 64, 16, 32, 16)])
+def test_armt_kernels(N, T, D, dm, Dv, M, dtype):
+    P = 6 * dm
+    ks = jax.random.split(jax.random.PRNGKey(N * T + D), 8)
+    x = jax.random.normal(ks[0], (N, T, D), dtype)
+    wq = jax.random.normal(ks[1], (D, dm), dtype) * 0.3
+    A = jax.random.normal(ks[2], (N, P, Dv), jnp.float32) * 0.1
+    z = jax.random.uniform(ks[3], (N, P), jnp.float32)
+    out = ops.assoc_read(x, wq, A, z, use_kernel=True, interpret=True)
+    _close(out, ref.armt_read_ref(x, wq, A, z), dtype)
+
+    m = jax.random.normal(ks[4], (N, M, D), dtype)
+    wk = jax.random.normal(ks[5], (D, dm), dtype) * 0.3
+    wv = jax.random.normal(ks[6], (D, Dv), dtype) * 0.3
+    wb = jax.random.normal(ks[7], (D, 1), dtype) * 0.3
+    A2, z2 = ops.assoc_update(m, wk, wv, wb, A, z,
+                              use_kernel=True, interpret=True)
+    Ar, zr = ref.armt_update_ref(m, wk, wv, wb, A, z)
+    _close(A2, Ar, dtype)
+    _close(z2, zr, dtype)
+
+
+# ---------------------------------------------------------------- mamba scan
+@pytest.mark.parametrize("B,T,dI,dS", [(1, 8, 16, 4), (2, 16, 24, 4),
+                                       (2, 32, 64, 8)])
+def test_mamba_scan(B, T, dI, dS):
+    ks = jax.random.split(jax.random.PRNGKey(B * T + dI), 5)
+    x = jax.random.normal(ks[0], (B, T, dI)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, dI)))
+    Bt = jax.random.normal(ks[2], (B, T, dS)) * 0.5
+    Ct = jax.random.normal(ks[3], (B, T, dS)) * 0.5
+    A_log = jnp.log(jnp.tile(jnp.arange(1., dS + 1)[None], (dI, 1)))
+    D = jnp.ones(dI)
+    h0 = jax.random.normal(ks[4], (B, dI, dS)) * 0.1
+    y, hT = ops.selective_scan_fused(x, dt, Bt, Ct, A_log, D, h0,
+                                     use_kernel=True, interpret=True)
+    yr, hr = ref.mamba_scan_ref(x, dt, Bt, Ct, A_log, D, h0)
+    _close(y, yr, jnp.float32)
+    _close(hT, hr, jnp.float32)
+
+
+def test_model_attention_matches_kernel_ref():
+    """The model's jnp attention path == the kernel oracle (same math).
+    RoPE disabled so projections can be compared directly."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models.attention import attention, attn_param_init
+    cfg = dataclasses.replace(get_smoke_config("h2o-danube-1.8b"),
+                              use_rope=False, sliding_window=0)
+    p = attn_param_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    # reproduce internals: project then compare sdpa vs kernel ref
+    from repro.models.attention import _project_qkv
+    q, k, v = _project_qkv(x, p, cfg)
+    o_model = attention(x, p, cfg)
+    # kernel layout is [N, H, T, hd]
+    o_ref = ref.flash_attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                    v.swapaxes(1, 2), causal=True)
+    o_ref = o_ref.swapaxes(1, 2).reshape(2, 16, -1) @ p["wo"]
+    np.testing.assert_allclose(np.asarray(o_model), np.asarray(o_ref),
+                               atol=2e-5, rtol=1e-4)

@@ -1,0 +1,85 @@
+"""Model-level schedule equivalence across all families (paper Table 2
+metric: relative Frobenius error of logits) + fp64 exactness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import forward_hidden, init_params
+from repro.models.layers import norm
+from repro.models.model import _head_matmul
+
+FAMS = ["h2o-danube-1.8b", "qwen2-moe-a2.7b", "kimi-k2-1t-a32b",
+        "jamba-1.5-large-398b", "falcon-mamba-7b", "whisper-medium",
+        "chameleon-34b"]
+
+
+def _logits(params, cfg, h):
+    hn = norm(cfg.norm, h, params["final_norm"])
+    return _head_matmul(params, cfg, hn).astype(jnp.float32)
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_logits_relative_error_below_paper_bound(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 8, cfg.vocab)
+    kw = {}
+    if cfg.encoder is not None:
+        kw["enc_frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (2, cfg.encoder.n_frames, cfg.d_model))
+    seg = cfg.armt.segment_len if cfg.armt else 16
+    hs, _ = forward_hidden(params, cfg, toks, schedule="sequential",
+                           seg_len=seg, **kw)
+    hd, _ = forward_hidden(params, cfg, toks, schedule="diagonal",
+                           seg_len=seg, **kw)
+    ls, ld = _logits(params, cfg, hs), _logits(params, cfg, hd)
+    rel = float(jnp.linalg.norm(ls - ld) / jnp.linalg.norm(ls))
+    # paper Table 2 reports <= 2% for their fp16 CUDA kernels; our fp32
+    # reordering drift is orders of magnitude smaller
+    assert rel < 2e-3, f"{arch}: rel logits err {rel}"
+
+
+_FP64_SCRIPT = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import dataclasses, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.models import init_params, forward_hidden
+cfg = dataclasses.replace(get_smoke_config("h2o-danube-1.8b"), dtype="float64")
+params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float64)
+toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 8, cfg.vocab)
+hs, _ = forward_hidden(params, cfg, toks, schedule="sequential")
+hdg, _ = forward_hidden(params, cfg, toks, schedule="diagonal")
+d = float(jnp.abs(hs - hdg).max())
+print("MAXDIFF", d)
+assert d < 1e-10, d
+"""
+
+
+def test_fp64_exactness_danube():
+    """In fp64 the reordering is exact to machine epsilon — proves the
+    executors compute the *same* function (paper: 'preserving exact
+    recurrence'). Runs in a subprocess because x64 must be set at startup."""
+    import subprocess, sys
+    r = subprocess.run([sys.executable, "-c", _FP64_SCRIPT],
+                       capture_output=True, text=True, timeout=420,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    assert "MAXDIFF" in r.stdout and r.returncode == 0, r.stderr[-2000:]
+
+
+def test_full_mode_matches_single_segment():
+    """mode='full' on one segment == segmented with seg_len = total (the
+    memoryless base transformer)."""
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    cfg = dataclasses.replace(cfg, armt=None)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 8, cfg.vocab)
+    h_full, _ = forward_hidden(params, cfg, toks, mode="full")
+    h_seg, _ = forward_hidden(params, cfg, toks, mode="segmented", seg_len=32)
+    np.testing.assert_allclose(np.asarray(h_full[0]), np.asarray(h_seg[0]),
+                               atol=1e-5)

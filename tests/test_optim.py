@@ -1,0 +1,55 @@
+"""Optimizer: convergence, clipping, schedule, non-finite step skipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (OptimConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, global_norm, lr_schedule)
+
+
+def test_adamw_converges_on_quadratic():
+    ocfg = OptimConfig(lr=0.1, weight_decay=0.0, clip_norm=0,
+                       warmup_steps=0, total_steps=200, min_lr_ratio=1.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params, ocfg)
+    loss = lambda p: jnp.sum((p["w"] - 1.0) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(params, g, opt, ocfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+
+
+def test_lr_schedule_shape():
+    ocfg = OptimConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                       min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(ocfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] < 0.2                      # warmup starts low
+    assert abs(lrs[10] - 1.0) < 1e-5         # peak at warmup end
+    assert abs(lrs[100] - 0.1) < 1e-3        # decays to min ratio
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+def test_train_step_skips_nonfinite():
+    from repro.configs import get_smoke_config
+    from repro.train import init_train_state, make_train_step
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    ocfg = OptimConfig(total_steps=10, warmup_steps=1)
+    state = init_train_state(cfg, ocfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, ocfg, schedule="sequential"))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 8, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    # poison the params of one leaf -> loss becomes NaN -> step must skip
+    bad = jax.tree_util.tree_map(lambda x: x, state)
+    bad["params"]["embed"] = state["params"]["embed"].at[0, 0].set(jnp.nan)
+    new_state, metrics = step(bad, batch)
+    assert float(metrics["skipped"]) == 1.0
+    # params unchanged (the skip kept the old values)
+    np.testing.assert_array_equal(np.asarray(new_state["params"]["embed"]),
+                                  np.asarray(bad["params"]["embed"]))

@@ -1,0 +1,57 @@
+"""Original RMT baseline: the paper's Limitation 1 made precise — the
+diagonal schedule violates RMT's inter-layer dependency, while the PRMT
+executors remain valid; and the RMT executor itself works sequentially."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import StackLayout, diagonal_groups, validate_schedule
+from repro.core.rmt import diagonal_violates_rmt, rmt_dependencies, run_rmt
+
+
+@given(st.integers(2, 12), st.integers(2, 12))
+@settings(max_examples=20, deadline=None)
+def test_diagonal_inapplicable_to_rmt(S, L):
+    """Paper Limitation 1: for any L >= 2, diagonal batching breaks RMT."""
+    assert diagonal_violates_rmt(S, L)
+
+
+def test_diagonal_valid_for_single_layer_rmt():
+    """L == 1: RMT degenerates to PRMT; the diagonal schedule is valid."""
+    assert not diagonal_violates_rmt(8, 1)
+
+
+def test_rmt_dependency_structure():
+    assert rmt_dependencies(0, 0, 4) == []
+    assert (3, 3) in rmt_dependencies(4, 0, 4)      # memory from final layer
+    assert (4, 1) in rmt_dependencies(4, 2, 4)
+
+
+def test_run_rmt_carries_memory():
+    """RMT memory actually transports information across segments: zeroing
+    the first segment's tokens must still influence later outputs less than
+    zeroing the memory does."""
+    layout = StackLayout(prelude=(), pattern=("a",), n_super=2)
+
+    def apply_block(t, p, x, st):
+        # position-mixing block (attention stand-in): tokens see the memory
+        return jnp.tanh(x @ p["w"] + x.mean(axis=1, keepdims=True)), st
+
+    D, M, B, T, S = 8, 2, 1, 4, 3
+    key = jax.random.PRNGKey(0)
+    params = {"prelude": (),
+              "pattern": ({"w": jax.random.normal(key, (2, D, D)) * 0.5},)}
+    mem0 = jax.random.normal(jax.random.PRNGKey(1), (B, M, D))
+    segs = jax.random.normal(jax.random.PRNGKey(2), (S, B, T, D))
+    ys, fin = run_rmt(layout, params, mem0, segs, apply_block)
+    assert ys.shape == (S, B, T, D)
+    assert fin.shape == (B, M, D)
+    # memory dependence: different mem0 -> different final segment output
+    ys2, _ = run_rmt(layout, params, mem0 + 1.0, segs, apply_block)
+    assert float(jnp.abs(ys[-1] - ys2[-1]).max()) > 1e-4
+    # tokens of segment 0 also reach segment 2 through memory
+    segs_z = segs.at[0].set(0.0)
+    ys3, _ = run_rmt(layout, params, mem0, segs_z, apply_block)
+    assert float(jnp.abs(ys[-1] - ys3[-1]).max()) > 1e-6

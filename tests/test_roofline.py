@@ -1,0 +1,74 @@
+"""Roofline machinery: HLO flop counting with trip multipliers, collective
+wire-byte formulas, shape parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import HloAnalyzer, shape_bytes, wire_bytes
+from repro.roofline.model_math import model_flops, param_counts
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[16,1024]{1,0}") == 16 * 1024 * 2
+    assert shape_bytes("f32[8]") == 32
+    assert shape_bytes("(f32[2,2], s32[3])") == 16 + 12
+    assert shape_bytes("pred[7]") == 7
+
+
+def test_wire_bytes_formulas():
+    assert wire_bytes("all-reduce", 100, 4) == pytest.approx(150.0)
+    assert wire_bytes("all-gather", 100, 4) == pytest.approx(75.0)
+    assert wire_bytes("reduce-scatter", 100, 4) == pytest.approx(300.0)
+    assert wire_bytes("collective-permute", 100, 4) == 100.0
+    assert wire_bytes("all-reduce", 100, 1) == 0.0
+
+
+def test_flops_count_scan_trips():
+    def f(x, w):
+        def step(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(step, x, None, length=7)
+        return y
+    x = jnp.zeros((64, 128))
+    w = jnp.zeros((128, 128))
+    hlo = jax.jit(f).lower(x, w).compile().as_text()
+    a = HloAnalyzer(hlo, 1)
+    assert a.flops() == pytest.approx(7 * 2 * 64 * 128 * 128)
+
+
+def test_nested_scan_trips():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+    x = jnp.zeros((16, 32))
+    w = jnp.eye(32)
+    hlo = jax.jit(f).lower(x, w).compile().as_text()
+    a = HloAnalyzer(hlo, 1)
+    assert a.flops() == pytest.approx(15 * 2 * 16 * 32 * 32)
+
+
+def test_param_counts_moe_active():
+    from repro.configs import get_config
+    total, active = param_counts(get_config("kimi-k2-1t-a32b"))
+    assert 0.9e12 < total < 1.3e12            # ~1T total
+    assert 25e9 < active < 45e9               # ~32B active
+    t2, a2 = param_counts(get_config("h2o-danube-1.8b"))
+    assert t2 == a2                            # dense: all params active
+
+
+def test_model_flops_kinds():
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("h2o-danube-1.8b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    dc = model_flops(cfg, SHAPES["decode_32k"])
+    assert tr > pf > dc > 0
+    # train = 6ND with D = 4096*256 tokens
+    n = param_counts(cfg)[1] - cfg.vocab * cfg.d_model
+    assert tr == pytest.approx(6 * n * 4096 * 256)

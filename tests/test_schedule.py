@@ -1,0 +1,52 @@
+"""Diagonal schedule: Lemma 3.1 + DAG validity (property-based)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (StackLayout, cell_dependencies, diagonal_groups,
+                        is_minimal, validate_schedule)
+
+
+@given(st.integers(1, 40), st.integers(1, 40))
+@settings(max_examples=30, deadline=None)
+def test_lemma_3_1(S, L):
+    groups = diagonal_groups(S, L)
+    validate_schedule(groups, S, L)          # covers grid, respects deps
+    assert is_minimal(groups, S, L)          # S+L-1 groups, earliest slots
+    assert len(groups) == S + L - 1
+    # group width is bounded by min(S, L) — at most N_layers concurrent ops
+    assert max(len(g) for g in groups) == min(S, L)
+
+
+def test_sequential_schedule_is_not_minimal():
+    # the baseline executes S*L singleton groups
+    S, L = 4, 3
+    seq = [[(s, l)] for s in range(S) for l in range(L)]
+    validate_schedule(seq, S, L)
+    assert not is_minimal(seq, S, L)
+    assert len(seq) == S * L > S + L - 1
+
+
+def test_dependencies():
+    assert cell_dependencies(0, 0) == []
+    assert cell_dependencies(2, 0) == [(1, 0)]
+    assert set(cell_dependencies(2, 3)) == {(2, 2), (1, 3)}
+
+
+def test_stack_layout_slots():
+    lay = StackLayout(prelude=("a",), pattern=("x", "y"), n_super=3)
+    assert lay.n_layers == 7
+    assert lay.layer_types == ("a", "x", "y", "x", "y", "x", "y")
+    assert list(lay.position_slots(0)) == [1, 3, 5]
+    assert list(lay.position_slots(1)) == [2, 4, 6]
+
+
+def test_stack_layout_from_config():
+    from repro.configs import get_config
+    cfg = get_config("jamba-1.5-large-398b")
+    lay = StackLayout.from_config(cfg)
+    assert lay.n_layers == 72
+    types = lay.layer_types
+    assert sum(t == "attn" for t in types) == 9          # 1:7 attn:mamba
+    assert sum(t.startswith("mamba") for t in types) == 63
+    assert sum(t.endswith("moe") for t in types) == 36   # MoE every other

@@ -1,0 +1,106 @@
+"""Sharding rules: divisibility safety, ZeRO-1 moment sharding, batch axes,
+and an end-to-end small-mesh lowering (8 fake devices, subprocess)."""
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.model import param_specs
+from repro.parallel import sharding as shd
+
+
+class FakeMesh:
+    """Minimal stand-in exposing axis_names/shape for rule tests."""
+    def __init__(self, shape):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+def test_param_leaf_rules():
+    tp = 16
+    # vocab divisible -> shard vocab
+    assert shd.param_leaf_spec(["embed"], (32000, 2560), tp) == P("model", None)
+    # whisper vocab NOT divisible -> shard d_model instead
+    assert shd.param_leaf_spec(["embed"], (51865, 1024), tp) == P(None, "model")
+    # attention column/row parallel
+    assert shd.param_leaf_spec(["attn", "wq"], (2560, 2560), tp) == P(None, "model")
+    assert shd.param_leaf_spec(["attn", "wo"], (2560, 2560), tp) == P("model", None)
+    # MoE expert parallelism when E divides
+    assert shd.param_leaf_spec(["moe", "wg"], (384, 7168, 2048), tp) == \
+        P("model", None, None)
+    # qwen2-moe: 60 experts don't divide 16 -> shard FFN dim
+    assert shd.param_leaf_spec(["moe", "wg"], (60, 2048, 1408), tp) == \
+        P(None, None, "model")
+    # shared expert uses dense FFN rules, not expert rules
+    assert shd.param_leaf_spec(["moe", "shared", "wd"], (5632, 2048), tp) == \
+        P("model", None)
+    # ARMT memory: wv value-dim sharded, wq/wk replicated
+    assert shd.param_leaf_spec(["mem", "wv"], (2560, 2560), tp) == P(None, "model")
+    assert shd.param_leaf_spec(["mem", "wq"], (2560, 64), tp) == P(None, None)
+
+
+def test_every_arch_has_valid_specs():
+    """All sharded dims must divide the axis size — for every arch."""
+    from repro.configs import ASSIGNED_ARCHS
+    mesh_shape = {"data": 16, "model": 16}
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        shapes = param_specs(cfg)
+        flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        for path, leaf in flat:
+            names = shd._path_names(path)
+            stacked = ("pattern" in names) or ("enc" in names and "blocks" in names)
+            shape = leaf.shape[1:] if stacked else leaf.shape
+            spec = shd.param_leaf_spec(names, shape, 16)
+            for dim, ax in enumerate(spec):
+                if ax is not None:
+                    assert shape[dim] % 16 == 0, (arch, names, shape, spec)
+
+
+def test_batch_axes():
+    m = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert shd.batch_axes(m, 256) == ("pod", "data")
+    assert shd.batch_axes(m, 2) == "pod"
+    assert shd.batch_axes(m, 1) is None
+    m2 = FakeMesh({"data": 16, "model": 16})
+    assert shd.batch_axes(m2, 32) == "data"
+
+
+SMALL_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.launch.specs import build_cell
+from repro.configs import get_smoke_config
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = get_smoke_config("qwen2-moe-a2.7b")
+import dataclasses
+# make smoke dims divisible by model=4
+cfg = dataclasses.replace(cfg, d_model=32, n_heads=4, n_kv_heads=4, d_head=8)
+with mesh:
+    cell = build_cell("qwen2-moe-a2.7b", "train_4k", mesh, cfg_override=cfg,
+                      schedule="sequential")
+    # shrink the batch spec to smoke scale
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as SDS
+    batch = {"tokens": SDS((8, 64), jnp.int32), "labels": SDS((8, 64), jnp.int32)}
+    from repro.parallel import sharding as shd
+    lowered = jax.jit(cell.fn, in_shardings=(cell.in_shardings[0],
+                                             shd.batch_specs(mesh, batch)),
+                      out_shardings=cell.out_shardings).lower(cell.args[0], batch)
+    compiled = lowered.compile()
+    print("COMPILED_OK", compiled.cost_analysis().get("flops", 0) > 0)
+"""
+
+
+def test_small_mesh_train_step_compiles():
+    r = subprocess.run([sys.executable, "-c", SMALL_MESH_SCRIPT],
+                       capture_output=True, text=True, timeout=420,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert "COMPILED_OK True" in r.stdout, r.stderr[-2000:]

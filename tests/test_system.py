@@ -1,0 +1,56 @@
+"""End-to-end behaviour: the fault-tolerant training loop learns, resumes
+from checkpoints, and the needle task shows the ARMT memory actually carries
+information across segments."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import lm_stream, needle_qa
+from repro.optim import OptimConfig
+from repro.train.loop import train_loop
+
+
+def test_loss_decreases_lm():
+    cfg = get_smoke_config("llama-1b-armt")
+    ocfg = OptimConfig(lr=3e-3, total_steps=30, warmup_steps=3)
+    data = lm_stream(cfg.vocab, 4, 64, seed=0)
+    out = train_loop(cfg, ocfg, data, steps=30, schedule="sequential")
+    losses = [h["loss"] for h in out["history"]]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_checkpoint_resume_continues(tmp_path):
+    cfg = get_smoke_config("llama-1b-armt")
+    ocfg = OptimConfig(lr=1e-3, total_steps=20, warmup_steps=2)
+    data1 = lm_stream(cfg.vocab, 2, 64, seed=0)
+    out1 = train_loop(cfg, ocfg, data1, steps=10, ckpt_dir=str(tmp_path),
+                      ckpt_every=5, schedule="sequential")
+    assert out1["last_step"] == 10
+    # fresh process-equivalent: new loop resumes from step 10
+    data2 = lm_stream(cfg.vocab, 2, 64, seed=0)
+    out2 = train_loop(cfg, ocfg, data2, steps=15, ckpt_dir=str(tmp_path),
+                      ckpt_every=5, schedule="sequential")
+    steps = [h["step"] for h in out2["history"]]
+    assert steps[0] == 10 and out2["last_step"] == 15
+    # metrics were journaled
+    lines = (tmp_path / "metrics.jsonl").read_text().strip().splitlines()
+    assert len(lines) >= 15
+
+
+def test_needle_loss_improves_with_training():
+    """Train the reduced ARMT on needle-QA where the needle sits in an
+    *earlier segment* than the query — solvable only via memory."""
+    cfg = get_smoke_config("llama-1b-armt")
+    ocfg = OptimConfig(lr=3e-3, total_steps=60, warmup_steps=5,
+                       weight_decay=0.0)
+    data = needle_qa(cfg.vocab, 8, 64, seed=0, n_keys=4,
+                     needle_region=(0.05, 0.4))
+    out = train_loop(cfg, ocfg, data, steps=60, schedule="sequential")
+    losses = [h["loss"] for h in out["history"]]
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) * 0.8, (
+        losses[:5], losses[-5:])
