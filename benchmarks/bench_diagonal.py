@@ -1,0 +1,83 @@
+"""Schedule comparison with machine-readable output: sequential vs
+diagonal-vmap vs diagonal-fused wall-clock per segment count, written to
+``BENCH_diagonal.json`` so the perf trajectory is trackable across PRs
+(EXPERIMENTS.md §Perf).
+
+The fused rows route the diagonal executor's grouped launch through
+models/grouped_blocks.py (auto kernel selection: Pallas on TPU, the jnp
+oracles — still one grouped GEMM / batched attention per step — on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+
+from benchmarks.common import row, timeit
+from repro.configs import ARMTConfig, get_smoke_config
+from repro.models import forward_hidden, init_params
+
+SEG = 128
+
+
+def _config():
+    cfg = get_smoke_config("llama-1b-armt")
+    return dataclasses.replace(
+        cfg, n_layers=8, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+        d_ff=128, max_position=1 << 16,
+        armt=ARMTConfig(segment_len=SEG, num_mem_tokens=8, d_mem=8))
+
+
+def bench_schedules(quick: bool = True, out_path: str | None = None):
+    cfg = _config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    seg_counts = (2, 4, 8, 16) if quick else (4, 16, 64, 256)
+
+    fwd = {
+        "sequential": jax.jit(lambda p, t: forward_hidden(
+            p, cfg, t, schedule="sequential")[0]),
+        "diagonal_vmap": jax.jit(lambda p, t: forward_hidden(
+            p, cfg, t, schedule="diagonal", grouped_impl="vmap")[0]),
+        "diagonal_fused": jax.jit(lambda p, t: forward_hidden(
+            p, cfg, t, schedule="diagonal", grouped_impl="fused")[0]),
+    }
+
+    results = []
+    for n_seg in seg_counts:
+        L = n_seg * SEG
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, L), 8, cfg.vocab)
+        rec = {"n_segments": n_seg, "seq_len": L}
+        for name, fn in fwd.items():
+            t = timeit(fn, params, toks, warmup=1, iters=2)
+            rec[f"{name}_s"] = t
+            row(f"{name}_S{n_seg}", t, f"segments={n_seg}")
+        rec["vmap_vs_sequential"] = rec["sequential_s"] / rec["diagonal_vmap_s"]
+        rec["fused_vs_vmap"] = rec["diagonal_vmap_s"] / rec["diagonal_fused_s"]
+        results.append(rec)
+
+    out_path = out_path or os.environ.get("BENCH_OUT", "BENCH_diagonal.json")
+    payload = {
+        "bench": "diagonal_schedules",
+        "backend": jax.default_backend(),
+        "segment_len": SEG,
+        "model": {"n_layers": cfg.n_layers, "d_model": cfg.d_model,
+                  "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+                  "num_mem_tokens": cfg.armt.num_mem_tokens},
+        "schedules": list(fwd),
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    row("bench_diagonal_json", 0.0, out_path)
+    return payload
+
+
+def main(quick: bool = True):
+    bench_schedules(quick)
+
+
+if __name__ == "__main__":
+    main(quick=False)

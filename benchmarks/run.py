@@ -7,6 +7,8 @@
   Tab. 2   bench_error_accumulation logits drift vs segments (fp32/bf16)
   Tab. 3/4 bench_babilong           needle-QA accuracy + speed
   §Roofline bench_roofline          dry-run artifact aggregation
+  §Perf    bench_diagonal           sequential vs diagonal-vmap vs
+                                    diagonal-fused -> BENCH_diagonal.json
 
 ``QUICK=0 python -m benchmarks.run`` for full sizes.
 """
@@ -23,10 +25,11 @@ def main() -> None:
     import benchmarks.bench_error_accumulation as e
     import benchmarks.bench_babilong as b
     import benchmarks.bench_roofline as r
+    import benchmarks.bench_diagonal as d
 
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (g, a, i, e, b, r):
+    for mod in (g, a, i, e, b, r, d):
         try:
             mod.main(quick=quick)
         except Exception:

@@ -89,6 +89,11 @@ class ArchConfig:
     dtype: str = "bfloat16"
     remat: str = "full"        # none | dots | full
     attn_impl: str = "dense"   # dense | chunked (flash-style online softmax)
+    # Diagonal-executor grouped-block implementation: 'vmap' applies the
+    # scalar block per slot via jax.vmap (exactness oracle, autodiff-safe);
+    # 'fused' launches the grouped Pallas kernels over the whole group
+    # (models/grouped_blocks.py; forward/inference fast path).
+    grouped_impl: str = "vmap"  # vmap | fused
     source: str = ""           # provenance note
 
     @property
@@ -115,6 +120,7 @@ class ArchConfig:
 
     def validate(self) -> None:
         assert self.d_model > 0 and self.n_layers > 0 and self.vocab > 0
+        assert self.grouped_impl in ("vmap", "fused"), self.grouped_impl
         if any(t.startswith("attn") or t.startswith("dec") or t.startswith("enc")
                for t in self.layer_types):
             assert self.n_heads > 0 and self.n_kv_heads > 0

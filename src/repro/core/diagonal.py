@@ -2,9 +2,11 @@
 
 Carries a slot buffer ``buf[L, B, T, D]`` with the invariant *slot l holds the
 segment currently entering layer l*. Each scan step executes one anti-diagonal:
-every slot advances one layer via a single grouped (vmapped) application per
-pattern position — the TPU analogue of the paper's CUTLASS GroupedGEMM +
-batched-attention launch — then the buffer shifts down one slot.
+every slot advances one layer via a single grouped application per pattern
+position — either ``jax.vmap(apply_block)`` (the exactness oracle) or the
+fused grouped-kernel path (``grouped_apply``, models/grouped_blocks.py), the
+TPU analogue of the paper's CUTLASS GroupedGEMM + batched-attention launch —
+then the buffer shifts down one slot.
 
 S + L - 1 steps total (minimal, Lemma 3.1); recurrence is exact: per-layer
 states are updated by the same functions in the same order as the sequential
@@ -33,7 +35,7 @@ def _mask_state(valid, new, old):
 
 def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
                  segments: jax.Array, apply_block: ApplyBlock,
-                 *, remat: bool = False, buf_spec=None):
+                 *, remat: bool = False, buf_spec=None, grouped_apply=None):
     """segments: [S, B, T, D] -> (ys [S, B, T, D], final_state).
 
     Same params/state structure as run_sequential — the two executors are
@@ -44,6 +46,14 @@ def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
     *becomes pipeline parallelism*: every stage applies its own layers with
     fully local weights and the shift lowers to one collective-permute per
     step — no per-layer tensor-parallel all-reduces (EXPERIMENTS.md §Perf).
+
+    grouped_apply: optional fused grouped-block application
+    ``(btype, stacked_params [n_super, ...], x [n_super, B, T, D],
+    stacked_state) -> (y, new_state)`` replacing the default
+    ``jax.vmap(apply_block)`` over each pattern position — the fast mode
+    built by ``models.grouped_blocks.make_grouped_apply`` that launches the
+    Pallas grouped kernels (grouped GEMM / batched flash attention / fused
+    ARMT memory) over the whole group (EXPERIMENTS.md §Perf).
     """
     S = segments.shape[0]
     L = layout.n_layers
@@ -114,9 +124,14 @@ def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
                                           int(slots[0]) + len(slots), axis=0)
             else:
                 xp = buf[slots]                               # [n_super, B, T, D]
-            grouped = jax.vmap(
-                lambda pp, xx, ss, _t=t: apply_block(_t, pp, xx, ss))
-            yp, stp = grouped(params["pattern"][p], xp, states["pattern"][p])
+            if grouped_apply is not None:
+                yp, stp = grouped_apply(t, params["pattern"][p], xp,
+                                        states["pattern"][p])
+            else:
+                grouped = jax.vmap(
+                    lambda pp, xx, ss, _t=t: apply_block(_t, pp, xx, ss))
+                yp, stp = grouped(params["pattern"][p], xp,
+                                  states["pattern"][p])
             if contiguous:
                 y = jax.lax.dynamic_update_slice_in_dim(
                     y, yp.astype(y.dtype), int(slots[0]), axis=0)

@@ -11,6 +11,11 @@ The paper-specific hot spot (eqs. 3-6). Two kernels:
 
 Layout: x [N, T, D], A [N, P, Dv], z [N, P] with N = group*batch (the diagonal
 executor's grouped launch), P = 2*nu*d_mem.
+
+Projection weights may be shared across N (``wq: [D, dm]``) or stacked per
+group (``wq: [G, D, dm]`` with N = G*batch) — the grouped-block fast path
+stacks per-layer weights on the group dim and the BlockSpec index map picks
+row ``n // batch``; the kernel bodies are identical in both cases.
 """
 from __future__ import annotations
 
@@ -21,6 +26,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 EPS = 1e-6
+
+
+def _wspec(w, N: int, last_block=None, last_axis=None):
+    """BlockSpec for a projection weight: shared ``[D, E]`` or per-group
+    ``[G, D, E]`` (row ``n // batch``, batch = N // G). ``last_block`` tiles
+    the final weight dim over grid axis ``last_axis``."""
+    D = w.shape[-2]
+    E = last_block if last_block is not None else w.shape[-1]
+    if w.ndim == 2:
+        def idx(n, *rest):
+            return (0, rest[last_axis] if last_axis is not None else 0)
+        return pl.BlockSpec((D, E), idx)
+    batch, r = divmod(N, w.shape[0])
+    assert r == 0, f"N={N} not divisible by weight groups G={w.shape[0]}"
+
+    def gidx(n, *rest):
+        return (n // batch, 0, rest[last_axis] if last_axis is not None else 0)
+    return pl.BlockSpec((None, D, E), gidx)
 
 
 def _dpfp(x, nu: int):
@@ -43,7 +66,7 @@ def _read_kernel(x_ref, wq_ref, a_ref, z_ref, o_ref, *, nu: int):
     jax.jit, static_argnames=("nu", "block_t", "block_v", "interpret"))
 def armt_read(x, wq, A, z, *, nu: int = 3, block_t: int = 256,
               block_v: int = 512, interpret: bool = False):
-    """x: [N,T,D], wq: [D,dm], A: [N,P,Dv], z: [N,P] -> [N,T,Dv]."""
+    """x: [N,T,D], wq: [D,dm] or [G,D,dm], A: [N,P,Dv], z: [N,P] -> [N,T,Dv]."""
     N, T, D = x.shape
     _, P, Dv = A.shape
     block_t = min(block_t, T)
@@ -54,7 +77,7 @@ def armt_read(x, wq, A, z, *, nu: int = 3, block_t: int = 256,
         grid=grid,
         in_specs=[
             pl.BlockSpec((None, block_t, D), lambda n, it, iv: (n, it, 0)),
-            pl.BlockSpec((D, wq.shape[1]), lambda n, it, iv: (0, 0)),
+            _wspec(wq, N),
             pl.BlockSpec((None, P, block_v), lambda n, it, iv: (n, 0, iv)),
             pl.BlockSpec((None, P), lambda n, it, iv: (n, 0)),
         ],
@@ -90,7 +113,7 @@ def _update_kernel(m_ref, wk_ref, wv_ref, wb_ref, a_ref, z_ref,
     jax.jit, static_argnames=("nu", "block_v", "interpret"))
 def armt_update(m, wk, wv, wb, A, z, *, nu: int = 3, block_v: int = 512,
                 interpret: bool = False):
-    """m: [N,M,D]; A: [N,P,Dv]; z: [N,P] -> (A', z')."""
+    """m: [N,M,D]; wk/wv/wb: [D,*] or [G,D,*]; A: [N,P,Dv]; z: [N,P] -> (A', z')."""
     N, M, D = m.shape
     _, P, Dv = A.shape
     block_v = min(block_v, Dv)
@@ -100,9 +123,9 @@ def armt_update(m, wk, wv, wb, A, z, *, nu: int = 3, block_v: int = 512,
         grid=grid,
         in_specs=[
             pl.BlockSpec((None, M, D), lambda n, iv: (n, 0, 0)),
-            pl.BlockSpec((D, wk.shape[1]), lambda n, iv: (0, 0)),
-            pl.BlockSpec((D, block_v), lambda n, iv: (0, iv)),
-            pl.BlockSpec((D, 1), lambda n, iv: (0, 0)),
+            _wspec(wk, N),
+            _wspec(wv, N, last_block=block_v, last_axis=0),
+            _wspec(wb, N),
             pl.BlockSpec((None, P, block_v), lambda n, iv: (n, 0, iv)),
             pl.BlockSpec((None, P), lambda n, iv: (n, 0)),
         ],

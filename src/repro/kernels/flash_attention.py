@@ -62,7 +62,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
             n_k, (start_q + block_q + block_k - 1) // block_k)
     else:
         n_k_eff = n_k
-    m_i, l_i, acc = jax.lax.fori_loop(0, n_k_eff, body, (m_i, l_i, acc))
+    if window > 0:
+        # skip fully-masked k blocks below the sliding window: the earliest
+        # key any query in this block attends to is start_q - window + 1
+        k_start = jnp.maximum(0, (start_q - window + 1) // block_k)
+    else:
+        k_start = 0
+    m_i, l_i, acc = jax.lax.fori_loop(k_start, n_k_eff, body, (m_i, l_i, acc))
     o_ref[...] = (acc / jnp.maximum(l_i, 1e-30)[:, None]).astype(o_ref.dtype)
 
 

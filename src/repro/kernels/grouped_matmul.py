@@ -5,6 +5,11 @@ stacked on a leading group dim, so the grouped GEMM is a batched GEMM the MXU
 executes at peak. Explicit VMEM tiling: [bm, bk] x [bk, bn] tiles with fp32
 accumulation over the K grid dimension (output block revisited, initialized
 at k==0 — the canonical Pallas accumulation pattern).
+
+Fused epilogue: an optional per-group bias [G, N] and an optional activation
+("silu" | "gelu") are applied to the fp32 accumulator in VMEM before the
+output store — the QKV bias add and the FFN up-proj + activation never round
+trip through HBM (the grouped-block fast path relies on this).
 """
 from __future__ import annotations
 
@@ -15,8 +20,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+ACTIVATIONS = (None, "silu", "gelu")
 
-def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+
+def _epilogue(acc, activation: str | None):
+    if activation == "silu":
+        return acc * jax.nn.sigmoid(acc)
+    if activation == "gelu":
+        return jax.nn.gelu(acc, approximate=True)
+    return acc
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int,
+                activation: str | None):
     ik = pl.program_id(3)
 
     @pl.when(ik == 0)
@@ -29,14 +45,40 @@ def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
 
     @pl.when(ik == n_k - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = _epilogue(acc_ref[...], activation).astype(o_ref.dtype)
+
+
+def _gmm_bias_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+                     activation: str | None):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                            w_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        acc = acc_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        o_ref[...] = _epilogue(acc, activation).astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
-def grouped_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k",
+                              "interpret"))
+def grouped_matmul(x, w, bias=None, *, activation: str | None = None,
+                   block_m: int = 128, block_n: int = 128,
                    block_k: int = 512, interpret: bool = False):
-    """x: [G, M, K], w: [G, K, N] -> [G, M, N]."""
+    """x: [G, M, K], w: [G, K, N] (+ bias [G, N]) -> [G, M, N].
+
+    ``activation`` is applied to the fp32 accumulator (after the bias add)
+    inside the kernel epilogue: None | "silu" | "gelu" (tanh approximation,
+    matching ``jax.nn.gelu(approximate=True)`` in models/layers.py).
+    """
+    assert activation in ACTIVATIONS, activation
     G, M, K = x.shape
     _, _, N = w.shape
     block_m = min(block_m, M)
@@ -44,18 +86,29 @@ def grouped_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
     block_k = min(block_k, K)
     n_k = pl.cdiv(K, block_k)
     grid = (G, pl.cdiv(M, block_m), pl.cdiv(N, block_n), n_k)
+    in_specs = [
+        pl.BlockSpec((None, block_m, block_k),
+                     lambda g, im, jn, ik: (g, im, ik)),
+        pl.BlockSpec((None, block_k, block_n),
+                     lambda g, im, jn, ik: (g, ik, jn)),
+    ]
+    if bias is None:
+        kernel = functools.partial(_gmm_kernel, n_k=n_k, activation=activation)
+        operands = (x, w)
+    else:
+        assert bias.shape == (G, N), (bias.shape, (G, N))
+        in_specs.append(pl.BlockSpec((None, block_n),
+                                     lambda g, im, jn, ik: (g, jn)))
+        kernel = functools.partial(_gmm_bias_kernel, n_k=n_k,
+                                   activation=activation)
+        operands = (x, w, bias)
     return pl.pallas_call(
-        functools.partial(_gmm_kernel, n_k=n_k),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((None, block_m, block_k),
-                         lambda g, im, jn, ik: (g, im, ik)),
-            pl.BlockSpec((None, block_k, block_n),
-                         lambda g, im, jn, ik: (g, ik, jn)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, block_m, block_n),
                                lambda g, im, jn, ik: (g, im, jn)),
         out_shape=jax.ShapeDtypeStruct((G, M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
-    )(x, w)
+    )(*operands)

@@ -50,12 +50,16 @@ def segment_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return out[..., :hd]
 
 
-def grouped_gemm(x, w, *, use_kernel: bool | None = None,
+def grouped_gemm(x, w, bias=None, *, activation: str | None = None,
+                 use_kernel: bool | None = None,
                  interpret: bool | None = None):
+    """Grouped GEMM with a fused bias + activation epilogue.
+    x: [G,M,K]; w: [G,K,N]; bias: optional [G,N]; activation: None|silu|gelu."""
     use_kernel = on_tpu() if use_kernel is None else use_kernel
     if not use_kernel:
-        return ref.grouped_matmul_ref(x, w)
-    return grouped_matmul(x, w, interpret=bool(interpret))
+        return ref.grouped_matmul_ref(x, w, bias, activation=activation)
+    return grouped_matmul(x, w, bias, activation=activation,
+                          interpret=bool(interpret))
 
 
 def assoc_read(x, wq, A, z, *, nu: int = 3, use_kernel: bool | None = None,

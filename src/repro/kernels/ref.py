@@ -29,16 +29,37 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     return jnp.einsum("nhts,nhsd->nhtd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
-def grouped_matmul_ref(x, w):
-    """x: [G,M,K], w: [G,K,N] -> [G,M,N] (fp32 accumulation)."""
-    return jnp.einsum("gmk,gkn->gmn", x, w,
-                      preferred_element_type=jnp.float32).astype(x.dtype)
+def grouped_matmul_ref(x, w, bias=None, *, activation: str | None = None):
+    """x: [G,M,K], w: [G,K,N] (+ bias [G,N]) -> [G,M,N] (fp32 accumulation,
+    epilogue = bias add + activation in fp32, matching the Pallas kernel)."""
+    acc = jnp.einsum("gmk,gkn->gmn", x.astype(jnp.float32),
+                     w.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)[:, None, :]
+    if activation == "silu":
+        acc = acc * jax.nn.sigmoid(acc)
+    elif activation == "gelu":
+        acc = jax.nn.gelu(acc, approximate=True)
+    else:
+        assert activation is None, activation
+    return acc.astype(x.dtype)
+
+
+def _proj(x, w):
+    """x: [N,T,D] @ w: [D,E] (shared) or [G,D,E] (per-group, N = G*batch)."""
+    if w.ndim == 2:
+        return jnp.einsum("ntd,de->nte", x, w)
+    G = w.shape[0]
+    N = x.shape[0]
+    xg = x.reshape((G, N // G) + x.shape[1:])
+    out = jnp.einsum("gbtd,gde->gbte", xg, w)
+    return out.reshape((N,) + out.shape[2:])
 
 
 def armt_read_ref(x, wq, A, z, *, nu: int = 3):
-    """x: [N,T,D]; A: [N,P,Dv]; z: [N,P] -> [N,T,Dv]."""
-    q = jnp.einsum("ntd,dm->ntm", x.astype(jnp.float32),
-                   wq.astype(jnp.float32))
+    """x: [N,T,D]; wq: [D,dm] or [G,D,dm]; A: [N,P,Dv]; z: [N,P] -> [N,T,Dv]."""
+    q = _proj(x.astype(jnp.float32), wq.astype(jnp.float32))
     pq = dpfp(q, nu)
     num = jnp.einsum("ntp,npv->ntv", pq, A.astype(jnp.float32))
     den = jnp.einsum("ntp,np->nt", pq, z.astype(jnp.float32)) + EPS
@@ -46,11 +67,11 @@ def armt_read_ref(x, wq, A, z, *, nu: int = 3):
 
 
 def armt_update_ref(m, wk, wv, wb, A, z, *, nu: int = 3):
+    """m: [N,M,D]; wk/wv/wb: [D,*] (shared) or [G,D,*] (per-group)."""
     m32 = m.astype(jnp.float32)
-    k = jnp.einsum("nmd,de->nme", m32, wk.astype(jnp.float32))
-    v = jnp.einsum("nmd,dv->nmv", m32, wv.astype(jnp.float32))
-    beta = jax.nn.sigmoid(jnp.einsum("nmd,do->nmo", m32,
-                                     wb.astype(jnp.float32)))[..., 0]
+    k = _proj(m32, wk.astype(jnp.float32))
+    v = _proj(m32, wv.astype(jnp.float32))
+    beta = jax.nn.sigmoid(_proj(m32, wb.astype(jnp.float32)))[..., 0]
     pk = dpfp(k, nu)
     zk = jnp.einsum("nmp,np->nm", pk, z.astype(jnp.float32))
     vbar = jnp.einsum("nmp,npv->nmv", pk, A.astype(jnp.float32)) \

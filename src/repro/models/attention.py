@@ -52,6 +52,20 @@ def _project_qkv(x, p, cfg):
     return q, k, v
 
 
+def rope_qk(q, k, cfg, positions=None):
+    """Apply RoPE to q/k [..., T, H, hd] from one shared cos/sin table.
+    Used by both the reference attention path and the fused grouped-block
+    path (models/grouped_blocks.py) so the rotary math is bit-identical."""
+    if not cfg.use_rope:
+        return q, k
+    if positions is None:
+        positions = jnp.arange(q.shape[-3])[None]
+    d_rot = int(cfg.head_dim * cfg.rope_fraction)
+    cos, sin = rope_cos_sin(positions, d_rot - d_rot % 2, cfg.rope_theta)
+    return (apply_rope(q, cos, sin, cfg.rope_fraction),
+            apply_rope(k, cos, sin, cfg.rope_fraction))
+
+
 def sdpa(q, k, v, mask=None) -> jax.Array:
     """q: [B,T,Hq,hd], k/v: [B,S,Hkv,hd] (GQA expanded by repeat), fp32 softmax."""
     B, T, Hq, hd = q.shape
@@ -136,13 +150,7 @@ def attention(x, p, cfg, *, positions=None, mask=None, bidirectional=False):
     """Self-attention over x [B,T,D] (full segment/sequence, no cache)."""
     B, T, _ = x.shape
     q, k, v = _project_qkv(x, p, cfg)
-    if cfg.use_rope:
-        if positions is None:
-            positions = jnp.arange(T)[None]
-        d_rot = int(cfg.head_dim * cfg.rope_fraction)
-        cos, sin = rope_cos_sin(positions, d_rot - d_rot % 2, cfg.rope_theta)
-        q = apply_rope(q, cos, sin, cfg.rope_fraction)
-        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    q, k = rope_qk(q, k, cfg, positions)
     impl = getattr(cfg, "attn_impl", "dense")
     if impl == "chunked":
         o = sdpa_chunked(q, k, v, causal=not bidirectional,
@@ -200,12 +208,7 @@ def decode_attention(x, p, cfg, cache: Dict, pos: jax.Array):
     int32 = number of tokens already in the cache. Returns (out, new_cache)."""
     B, Tq, _ = x.shape
     q, k, v = _project_qkv(x, p, cfg)
-    if cfg.use_rope:
-        positions = (pos + jnp.arange(Tq))[None]                   # [1,Tq]
-        d_rot = int(cfg.head_dim * cfg.rope_fraction)
-        cos, sin = rope_cos_sin(positions, d_rot - d_rot % 2, cfg.rope_theta)
-        q = apply_rope(q, cos, sin, cfg.rope_fraction)
-        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    q, k = rope_qk(q, k, cfg, (pos + jnp.arange(Tq))[None])
     ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
     S = ck.shape[1]

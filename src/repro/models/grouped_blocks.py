@@ -1,0 +1,130 @@
+"""Fused grouped-block execution for the diagonal executor (paper §3.3, §4.2).
+
+Each diagonal step advances one pattern position's ``n_super`` stacked layers
+simultaneously — the paper realizes that grouped launch as CUTLASS
+GroupedGEMM for the stacked linear projections plus one batched attention
+call over the whole group. The executor's default path expresses the group
+as ``jax.vmap(apply_block)`` and leaves the lowering to XLA; this module is
+the fast mode that executes the block with the grouped Pallas kernels
+directly:
+
+  * ``grouped_gemm``      — QKV / output / FFN projections, per-layer weights
+                            stacked on the group dim, with a fused bias +
+                            activation epilogue so the QKV bias add and the
+                            FFN up-proj + activation stay in VMEM
+  * ``segment_attention`` — one batched flash-attention launch over
+                            ``N = n_super * B`` (the kernel's designed layout)
+  * ``assoc_read/update`` — ARMT memory math (eqs. 3-6) with per-group
+                            projection weights, fp32 state
+
+Layout contract (EXPERIMENTS.md §Perf, DESIGN.md §7): the slot slice
+``x [n_super, B, T, D]`` flattens to ``N = n_super * B`` rows; projections run
+as ``[n_super, B*T, D]`` grouped GEMMs; attention and ARMT memory run over N.
+
+Only ``attn`` blocks (pre-norm attention + dense FFN + optional ARMT memory)
+have a fused implementation; every other block type falls back to the vmap
+path inside the same closure, so heterogeneous patterns still work. The vmap
+path (``grouped_impl="vmap"``) remains the CPU/exactness oracle — the fused
+path must match it to fp32 tolerance (tests/test_grouped_blocks.py).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ops as kops
+from repro.models.attention import rope_qk
+from repro.models.blocks import make_apply_block
+from repro.models.layers import norm, rmsnorm
+
+
+def make_grouped_apply(cfg, *, mode: str = "segmented",
+                       ssm_method: str = "scan",
+                       use_kernel: bool | None = None,
+                       interpret: bool | None = None):
+    """Returns grouped_apply(btype, stacked_params, x, stacked_state).
+
+    Drop-in replacement for ``jax.vmap(apply_block)`` over one pattern
+    position: ``stacked_params`` leaves are ``[n_super, ...]`` (as produced
+    by ``init_params``), ``x`` is the slot slice ``[n_super, B, T, D]``,
+    state leaves are ``[n_super, B, ...]``.
+
+    use_kernel/interpret follow the kernels/ops.py convention: None picks the
+    Pallas kernels on TPU and the jnp oracles elsewhere; tests pass
+    ``use_kernel=True, interpret=True`` to exercise the kernel bodies on CPU.
+    """
+    base = make_apply_block(cfg, mode=mode, ssm_method=ssm_method)
+    armt_on = cfg.armt is not None and mode == "segmented"
+    M = cfg.armt.num_mem_tokens if armt_on else 0
+    nu = cfg.armt.nu if armt_on else 3
+    kw = dict(use_kernel=use_kernel, interpret=interpret)
+
+    def fallback(t, p, x, st):
+        return jax.vmap(lambda pp, xx, ss, _t=t: base(_t, pp, xx, ss))(p, x, st)
+
+    def gg(h, w, bias=None, act=None):
+        # h: [G, B, T, Din] @ w: [G, Din, Dout] as one grouped GEMM
+        G, B, T, _ = h.shape
+        out = kops.grouped_gemm(h.reshape(G, B * T, h.shape[-1]), w, bias,
+                                activation=act, **kw)
+        return out.reshape(G, B, T, out.shape[-1])
+
+    def snorm(h, p):
+        # per-layer norm weights [G, D] broadcast against h [G, B, T, D];
+        # reuses the fp32 norm math from models/layers.py unchanged
+        return norm(cfg.norm, h, {k: v[:, None, None, :] for k, v in p.items()})
+
+    def fused_attn(p, x, state):
+        G, B, T, D = x.shape
+        N = G * B
+        hd, nq, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        new_state = dict(state)
+        if armt_on:
+            A_f = state["A"].reshape((N,) + state["A"].shape[2:])
+            z_f = state["z"].reshape((N,) + state["z"].shape[2:])
+            read = kops.assoc_read(x.reshape(N, T, D), p["mem"]["wq"],
+                                   A_f, z_f, nu=nu, **kw)
+            x = x + read.reshape(G, B, T, -1)
+
+        pa = p["attn"]
+        hln = snorm(x, p["ln1"])
+        q = gg(hln, pa["wq"], pa.get("bq")).reshape(G, B, T, nq, hd)
+        k = gg(hln, pa["wk"], pa.get("bk")).reshape(G, B, T, nkv, hd)
+        v = gg(hln, pa["wv"], pa.get("bv")).reshape(G, B, T, nkv, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(q, {"w": pa["qn"]["w"][:, None, None, None, :]})
+            k = rmsnorm(k, {"w": pa["kn"]["w"][:, None, None, None, :]})
+        q, k, v = (a.reshape((N, T) + a.shape[3:]) for a in (q, k, v))
+        q, k = rope_qk(q, k, cfg)
+        o = kops.segment_attention(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+            causal=True, window=cfg.sliding_window, **kw)
+        o = o.swapaxes(1, 2).reshape(G, B, T, nq * hd)
+        h = x + gg(o, pa["wo"])
+
+        if "ffn" in p:
+            h2 = snorm(h, p["ln2"])
+            pf = p["ffn"]
+            if cfg.act == "silu":       # swiglu: silu epilogue on the gate
+                gate = gg(h2, pf["wg"], act="silu")
+                up = gg(h2, pf["wu"])
+                y = h + gg(gate * up, pf["wd"])
+            else:                       # gelu MLP: bias + act epilogue
+                mid = gg(h2, pf["wi"], pf.get("bi"), act="gelu")
+                y = h + gg(mid, pf["wo"], pf.get("bo"))
+        else:
+            y = h
+
+        if armt_on and M > 0:
+            mtok = y[:, :, -M:, :].reshape(N, M, D)
+            A2, z2 = kops.assoc_update(mtok, p["mem"]["wk"], p["mem"]["wv"],
+                                       p["mem"]["wb"], A_f, z_f, nu=nu, **kw)
+            new_state["A"] = A2.reshape(state["A"].shape)
+            new_state["z"] = z2.reshape(state["z"].shape)
+        return y, new_state
+
+    def grouped_apply(t, p, x, state):
+        if t == "attn":
+            return fused_attn(p, x, state)
+        return fallback(t, p, x, state)
+
+    return grouped_apply

@@ -168,9 +168,15 @@ def forward_hidden(params: Dict, cfg: ArchConfig, tokens: jax.Array, *,
                    seg_len: Optional[int] = None,
                    enc_frames: Optional[jax.Array] = None,
                    ssm_method: str = "assoc",
-                   slot_spec=None) -> Tuple[jax.Array, Dict]:
+                   slot_spec=None,
+                   grouped_impl: Optional[str] = None) -> Tuple[jax.Array, Dict]:
     """Returns (hidden [S, B, T, D] — memory-token positions stripped,
-    final executor state)."""
+    final executor state).
+
+    grouped_impl: 'vmap' | 'fused' override of cfg.grouped_impl — 'fused'
+    routes the diagonal executor's per-step grouped launch through the
+    Pallas grouped kernels (models/grouped_blocks.py); only meaningful for
+    schedule='diagonal'."""
     B = tokens.shape[0]
     dtype = params["embed"].dtype
     if mode == "full":
@@ -192,13 +198,19 @@ def forward_hidden(params: Dict, cfg: ArchConfig, tokens: jax.Array, *,
         enc_out = encode(params, cfg, enc_frames)
         state0 = _fill_cross_kv(params, cfg, state0, enc_out)
 
-    apply = make_apply_block(cfg, mode=mode if mode == "full" else "segmented",
-                             ssm_method=ssm_method)
+    block_mode = mode if mode == "full" else "segmented"
+    apply = make_apply_block(cfg, mode=block_mode, ssm_method=ssm_method)
     exec_params = {"prelude": params["prelude"], "pattern": params["pattern"]}
     kw = {"remat": cfg.remat != "none"}
     if schedule == "diagonal":
         run = run_diagonal
         kw["buf_spec"] = slot_spec
+        impl = grouped_impl or cfg.grouped_impl
+        assert impl in ("vmap", "fused"), impl
+        if impl == "fused":
+            from repro.models.grouped_blocks import make_grouped_apply
+            kw["grouped_apply"] = make_grouped_apply(
+                cfg, mode=block_mode, ssm_method=ssm_method)
     else:
         run = run_sequential
     ys, fin = run(layout, exec_params, state0, x, apply, **kw)

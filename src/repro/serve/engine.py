@@ -53,12 +53,16 @@ class ServeEngine:
     """
 
     def __init__(self, params, cfg: ArchConfig, *, serve_mode: str = "armt",
-                 schedule: str = "diagonal", max_len: int = 8192):
+                 schedule: str = "diagonal", max_len: int = 8192,
+                 grouped_impl: Optional[str] = None):
         self.params = params
         self.cfg = cfg
         self.serve_mode = serve_mode
         self.schedule = schedule
         self.max_len = max_len
+        # 'fused' routes diagonal prefill through the grouped Pallas kernels
+        # (models/grouped_blocks.py); None defers to cfg.grouped_impl.
+        self.grouped_impl = grouped_impl
         self.seg_len = cfg.armt.segment_len if cfg.armt else 1024
         self._step = jax.jit(
             lambda p, s, t: decode_step(p, cfg, s, t, serve_mode=serve_mode))
@@ -67,6 +71,10 @@ class ServeEngine:
 
     def prefill(self, prompts: jax.Array, enc_frames=None):
         """prompts: [B, P]. Returns (next_token_logits, decode_state)."""
+        logits, dstate, _ = self._prefill(prompts, enc_frames=enc_frames)
+        return logits, dstate
+
+    def _prefill(self, prompts: jax.Array, enc_frames=None):
         B, P = prompts.shape
         dtype = self.params["embed"].dtype
         dstate = decode_state_init(self.cfg, B, serve_mode=self.serve_mode,
@@ -76,34 +84,45 @@ class ServeEngine:
         if n_full > 0:
             hidden, fin = forward_hidden(
                 self.params, self.cfg, prompts[:, :n_full * self.seg_len],
-                schedule=self.schedule, enc_frames=enc_frames)
+                schedule=self.schedule, enc_frames=enc_frames,
+                grouped_impl=self.grouped_impl)
             dstate = _transplant(fin, dstate)
             logits = last_logits(self.params, self.cfg, hidden)
         tail = prompts[:, n_full * self.seg_len:]
+        pos = 0                       # host-side segment position (no sync)
         if tail.shape[1] > 0:
-            logits, dstate = self._chunk(dstate, tail)
-        return logits, dstate
+            logits, dstate, pos = self._chunk(dstate, tail, pos)
+        return logits, dstate, pos
 
-    def _chunk(self, dstate, toks):
+    def _maybe_flush(self, dstate, pos: int):
+        """ARMT segment boundary: flush memory and reset the segment cache.
+        ``pos`` is tracked host-side — decode_step advances the device-side
+        ``dstate['pos']`` by exactly the tokens fed, so the two never diverge
+        and no device->host readback is needed per step."""
+        if (self.serve_mode == "armt" and self.cfg.armt
+                and pos >= self.seg_len):
+            return self._flush(self.params, dstate), 0
+        return dstate, pos
+
+    def _chunk(self, dstate, toks, pos: int):
         """Feed a multi-token chunk, flushing at ARMT segment boundaries."""
         logits = None
         t = 0
         T = toks.shape[1]
         while t < T:
-            room = (self.seg_len - int(dstate["pos"])
+            room = (self.seg_len - pos
                     if self.serve_mode == "armt" else T - t)
             take = min(room, T - t)
             logits, dstate = self._step(self.params, dstate,
                                         toks[:, t:t + take])
             t += take
-            if (self.serve_mode == "armt" and self.cfg.armt
-                    and int(dstate["pos"]) >= self.seg_len):
-                dstate = self._flush(self.params, dstate)
-        return logits, dstate
+            pos += take
+            dstate, pos = self._maybe_flush(dstate, pos)
+        return logits, dstate, pos
 
     def generate(self, prompts: jax.Array, max_new: int,
                  enc_frames=None) -> GenerationResult:
-        logits, dstate = self.prefill(prompts, enc_frames=enc_frames)
+        logits, dstate, pos = self._prefill(prompts, enc_frames=enc_frames)
         B = prompts.shape[0]
         out = np.zeros((B, max_new), np.int32)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -112,9 +131,8 @@ class ServeEngine:
             if i == max_new - 1:
                 break
             logits, dstate = self._step(self.params, dstate, tok)
-            if (self.serve_mode == "armt" and self.cfg.armt
-                    and int(dstate["pos"]) >= self.seg_len):
-                dstate = self._flush(self.params, dstate)
+            pos += 1
+            dstate, pos = self._maybe_flush(dstate, pos)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return GenerationResult(out, prompts.shape[1] // self.seg_len,
                                 self.schedule)

@@ -5,6 +5,9 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra ([test] in pyproject)
 from hypothesis import given, settings, strategies as st
 
 from repro.optim.compression import (dequantize_int8, ef_compress,

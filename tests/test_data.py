@@ -1,5 +1,8 @@
 """Data pipeline: determinism, exact resume, needle-task structure."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra ([test] in pyproject)
 from hypothesis import given, settings, strategies as st
 
 from repro.data import lm_stream, needle_qa

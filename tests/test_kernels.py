@@ -50,6 +50,63 @@ def test_grouped_matmul(G, M, K, N, dtype):
     _close(out, ref.grouped_matmul_ref(x, w), dtype)
 
 
+@pytest.mark.parametrize("activation", [None, "silu", "gelu"])
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_grouped_matmul_epilogue(activation, with_bias):
+    """Fused bias + activation epilogue == fp32 reference epilogue."""
+    G, M, K, N = 3, 48, 64, 96
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = jax.random.normal(ks[0], (G, M, K))
+    w = jax.random.normal(ks[1], (G, K, N))
+    b = jax.random.normal(ks[2], (G, N)) if with_bias else None
+    out = ops.grouped_gemm(x, w, b, activation=activation,
+                           use_kernel=True, interpret=True)
+    want = ref.grouped_matmul_ref(x, w, b, activation=activation)
+    _close(out, want, jnp.float32)
+
+
+def test_armt_grouped_weights():
+    """Per-group projection weights [G,D,*] (N = G*batch) == running each
+    group's shared-weight kernel separately."""
+    G, B, T, D, dm, Dv, M = 2, 3, 16, 32, 8, 48, 4
+    N, P = G * B, 6 * dm
+    ks = jax.random.split(jax.random.PRNGKey(11), 8)
+    x = jax.random.normal(ks[0], (N, T, D))
+    wq = jax.random.normal(ks[1], (G, D, dm)) * 0.3
+    A = jax.random.normal(ks[2], (N, P, Dv)) * 0.1
+    z = jax.random.uniform(ks[3], (N, P))
+    out = ops.assoc_read(x, wq, A, z, use_kernel=True, interpret=True)
+    want = jnp.concatenate([
+        ref.armt_read_ref(x[g * B:(g + 1) * B], wq[g],
+                          A[g * B:(g + 1) * B], z[g * B:(g + 1) * B])
+        for g in range(G)])
+    _close(out, want, jnp.float32)
+
+    m = jax.random.normal(ks[4], (N, M, D))
+    wk = jax.random.normal(ks[5], (G, D, dm)) * 0.3
+    wv = jax.random.normal(ks[6], (G, D, Dv)) * 0.3
+    wb = jax.random.normal(ks[7], (G, D, 1)) * 0.3
+    A2, z2 = ops.assoc_update(m, wk, wv, wb, A, z,
+                              use_kernel=True, interpret=True)
+    Ar, zr = ref.armt_update_ref(m, wk, wv, wb, A, z)
+    _close(A2, Ar, jnp.float32)
+    _close(z2, zr, jnp.float32)
+
+
+def test_flash_attention_window_block_skip():
+    """Sliding-window lower-bound skip: many k-blocks fully below the window
+    must not change the result (small block_k forces multiple skips)."""
+    from repro.kernels.flash_attention import flash_attention
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 16))
+    k = jax.random.normal(ks[1], (1, 2, 256, 16))
+    v = jax.random.normal(ks[2], (1, 2, 256, 16))
+    out = flash_attention(q, k, v, causal=True, window=24,
+                          block_q=64, block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=24)
+    _close(out, want, jnp.float32)
+
+
 # ---------------------------------------------------------------- armt
 @pytest.mark.parametrize("dtype", [jnp.float32])
 @pytest.mark.parametrize("N,T,D,dm,Dv,M", [

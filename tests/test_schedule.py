@@ -1,6 +1,7 @@
 """Diagonal schedule: Lemma 3.1 + DAG validity (property-based)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test extra ([test] in pyproject)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (StackLayout, cell_dependencies, diagonal_groups,
