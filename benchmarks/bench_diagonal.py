@@ -49,10 +49,14 @@ def bench_schedules(quick: bool = True, out_path: str | None = None):
         L = n_seg * SEG
         toks = jax.random.randint(jax.random.PRNGKey(1), (1, L), 8, cfg.vocab)
         rec = {"n_segments": n_seg, "seq_len": L}
+        # warmup=2 absorbs compile + first-run allocator noise; median of 5
+        # is stable enough to compare across PRs (warmup=1/iters=2 was not)
         for name, fn in fwd.items():
-            t = timeit(fn, params, toks, warmup=1, iters=2)
+            t = timeit(fn, params, toks, warmup=2, iters=5)
             rec[f"{name}_s"] = t
-            row(f"{name}_S{n_seg}", t, f"segments={n_seg}")
+            rec[f"{name}_tok_s"] = L / t
+            row(f"{name}_S{n_seg}", t,
+                f"segments={n_seg} {L / t:.0f} tok/s")
         rec["vmap_vs_sequential"] = rec["sequential_s"] / rec["diagonal_vmap_s"]
         rec["fused_vs_vmap"] = rec["diagonal_vmap_s"] / rec["diagonal_fused_s"]
         results.append(rec)

@@ -1,0 +1,137 @@
+"""Continuous-batching serving benchmark -> ``BENCH_serve.json``
+(EXPERIMENTS.md §Serving).
+
+For each concurrency level (number of decode slots) the same request set —
+heterogeneous prompt lengths, all queued at t=0 — is pushed through
+``ServeEngine.serve``; we record aggregate decode throughput (tok/s),
+per-request time-to-first-token (first streamed event; chunk-granular by
+design), and per-request completion latency. A one-request-at-a-time
+`generate` pass over the identical set is the no-continuous-batching
+baseline. A warmup pass absorbs compilation so the numbers measure the
+steady state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs import ARMTConfig, get_smoke_config
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+
+SEG = 32
+
+
+def _config():
+    cfg = get_smoke_config("llama-1b-armt")
+    return dataclasses.replace(
+        cfg, n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+        d_ff=128, max_position=1 << 16,
+        armt=ARMTConfig(segment_len=SEG, num_mem_tokens=8, d_mem=8))
+
+
+def _requests(cfg, n, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    # two prompt-length buckets (bounded compile shapes) at different
+    # segment phases
+    lens = [2 * SEG if i % 2 == 0 else 2 * SEG + SEG // 2 for i in range(n)]
+    return [Request(req_id=f"r{i}",
+                    prompt=rng.integers(8, cfg.vocab, (L,)).astype(np.int32),
+                    max_new=max_new)
+            for i, L in enumerate(lens)]
+
+
+def _drive(eng, reqs, n_slots, chunk):
+    t0 = time.perf_counter()
+    ttft, done_at, n_tok = {}, {}, 0
+    for ev in eng.serve(reqs, n_slots=n_slots, chunk=chunk):
+        now = time.perf_counter() - t0
+        n_tok += 1
+        ttft.setdefault(ev.req_id, now)
+        if ev.done:
+            done_at[ev.req_id] = now
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": wall,
+        "throughput_tok_s": n_tok / wall,
+        "ttft_s_mean": float(np.mean(list(ttft.values()))),
+        "ttft_s_max": float(np.max(list(ttft.values()))),
+        "latency_s_mean": float(np.mean(list(done_at.values()))),
+        "latency_s_max": float(np.max(list(done_at.values()))),
+    }
+
+
+def bench_serve(quick: bool = True, out_path: str | None = None):
+    cfg = _config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_new = 32 if quick else 128
+    chunk = 8
+    slot_counts = (1, 2, 4) if quick else (1, 2, 4, 8)
+    n_req = 2 * max(slot_counts)
+
+    eng = ServeEngine(params, cfg, serve_mode="armt",
+                      max_len=4 * SEG + max_new)
+    reqs = _requests(cfg, n_req, max_new)
+
+    def warm(n_slots):
+        # compile prefill shapes and trace the shared packed step / admit
+        # fns for this slot count, so the timed pass measures steady state
+        for _ in eng.serve(_requests(cfg, max(2, n_slots), chunk, seed=1),
+                           n_slots=n_slots, chunk=chunk):
+            pass
+
+    # no-continuous-batching baseline: one request at a time
+    eng.generate(np.asarray(reqs[0].prompt)[None], max_new)       # warm
+    eng.generate(np.asarray(reqs[1].prompt)[None], max_new)
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.generate(np.asarray(r.prompt)[None], max_new)
+    base_wall = time.perf_counter() - t0
+    baseline_tok_s = n_req * max_new / base_wall
+    row("serve_one_by_one", base_wall, f"{baseline_tok_s:.1f} tok/s")
+
+    results = []
+    for n_slots in slot_counts:
+        warm(n_slots)
+        rec = {"n_slots": n_slots, "n_requests": n_req, "max_new": max_new,
+               "chunk": chunk}
+        rec.update(_drive(eng, reqs, n_slots, chunk))
+        rec["speedup_vs_one_by_one"] = rec["throughput_tok_s"] / baseline_tok_s
+        results.append(rec)
+        row(f"serve_slots{n_slots}", rec["wall_s"],
+            f"{rec['throughput_tok_s']:.1f} tok/s "
+            f"ttft={rec['ttft_s_mean']:.3f}s")
+
+    # own env var — sharing BENCH_OUT with bench_diagonal would make the two
+    # benches overwrite each other's artifact under benchmarks.run
+    out_path = out_path or os.environ.get("BENCH_SERVE_OUT",
+                                          "BENCH_serve.json")
+    payload = {
+        "bench": "serve_continuous_batching",
+        "backend": jax.default_backend(),
+        "segment_len": SEG,
+        "model": {"n_layers": cfg.n_layers, "d_model": cfg.d_model,
+                  "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+                  "num_mem_tokens": cfg.armt.num_mem_tokens},
+        "baseline_one_by_one_tok_s": baseline_tok_s,
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    row("bench_serve_json", 0.0, out_path)
+    return payload
+
+
+def main(quick: bool = True):
+    bench_serve(quick)
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -9,6 +9,8 @@
   §Roofline bench_roofline          dry-run artifact aggregation
   §Perf    bench_diagonal           sequential vs diagonal-vmap vs
                                     diagonal-fused -> BENCH_diagonal.json
+  §Serving bench_serve              continuous-batching throughput/TTFT/
+                                    latency vs slots -> BENCH_serve.json
 
 ``QUICK=0 python -m benchmarks.run`` for full sizes.
 """
@@ -26,10 +28,11 @@ def main() -> None:
     import benchmarks.bench_babilong as b
     import benchmarks.bench_roofline as r
     import benchmarks.bench_diagonal as d
+    import benchmarks.bench_serve as sv
 
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (g, a, i, e, b, r, d):
+    for mod in (g, a, i, e, b, r, d, sv):
         try:
             mod.main(quick=quick)
         except Exception:

@@ -205,7 +205,12 @@ def list_archs():
 def get_smoke_config(arch_id: str, *, seq_len: int = 64) -> ArchConfig:
     cfg = get_config(arch_id)
     n_pattern = len(cfg.block_pattern)
-    n_layers = len(cfg.prelude) + 2 * n_pattern  # two superblocks
+    # two superblocks (cross-superblock recurrence coverage) unless the
+    # pattern itself is long (jamba: 8 heterogeneous layers) — one repeat of
+    # a long pattern already exercises every block type, and doubling it
+    # used to make that single arch dominate the tier-1 wall-clock
+    n_sb = 1 if n_pattern >= 4 else 2
+    n_layers = len(cfg.prelude) + n_sb * n_pattern
     armt = None
     if cfg.armt is not None:
         armt = replace(cfg.armt, segment_len=max(8, seq_len // 4),

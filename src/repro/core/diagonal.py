@@ -101,9 +101,14 @@ def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
         # select is local on every shard; seg_in is replicated over 'stage')
         is0 = (slot_ids == 0)[(...,) + (None,) * (buf.ndim - 1)]
         buf = _constrain(jnp.where(is0, seg_in[None].astype(buf.dtype), buf))
-        # slot l holds segment i - l; valid iff 0 <= i - l < S
+        # slot l holds segment i - l; valid iff 0 <= i - l < S. Clear invalid
+        # fill/drain slots with a select, NOT a multiply: an inf/NaN produced
+        # by a block applied to empty padding would survive `0 * inf = nan`
+        # and poison any group-coupled application (grouped kernels, global
+        # MoE dispatch) on the next step.
         valid = (i >= slot_ids) & (i - slot_ids < S)                     # [L]
-        buf = buf * valid[(...,) + (None,) * (buf.ndim - 1)].astype(buf.dtype)
+        valid_b = valid[(...,) + (None,) * (buf.ndim - 1)]
+        buf = jnp.where(valid_b, buf, jnp.zeros_like(buf))
 
         y = jnp.zeros_like(buf)
         new_prelude = []

@@ -1,8 +1,12 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> --smoke``.
 
-Demonstrates the paper's deployment story: one long-context request at a
-time, prefilled with diagonal batching, decoded against constant-size ARMT
-state.
+Two modes:
+  * single (default): one fixed-shape batch, prefilled with diagonal
+    batching, decoded on-device against constant-size ARMT state.
+  * ``--continuous``: a stream of requests with heterogeneous prompt
+    lengths through the continuous-batching scheduler
+    (serve/scheduler.py) — tokens stream back per request as they are
+    produced.
 """
 from __future__ import annotations
 
@@ -20,25 +24,69 @@ def main():
     ap.add_argument("--serve-mode", default="armt", choices=["armt", "cache"])
     ap.add_argument("--schedule", default="diagonal",
                     choices=["diagonal", "sequential"])
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples on device")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over --requests requests")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
-    import jax.numpy as jnp
+    import numpy as np
     from repro.configs import get_config, get_smoke_config
     from repro.models import init_params
-    from repro.serve import ServeEngine
+    from repro.serve import ServeEngine, Request
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
+    if args.continuous and (args.temperature > 0 or args.top_k > 0):
+        ap.error("--continuous streams greedy tokens; --temperature/--top-k "
+                 "apply to single-batch mode only")
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
-                                 (args.batch, args.prompt_len), 8, cfg.vocab)
+    seg = cfg.armt.segment_len if cfg.armt else 64
+    # headroom for the longer of the two continuous prompt buckets
     eng = ServeEngine(params, cfg, serve_mode=args.serve_mode,
                       schedule=args.schedule,
-                      max_len=args.prompt_len + args.max_new)
+                      max_len=args.prompt_len + seg // 2 + args.max_new)
+
+    if args.continuous:
+        rng = np.random.default_rng(args.seed + 1)
+        # two prompt-length buckets: heterogeneous segment phases without a
+        # fresh prefill compile per request (cf. benchmarks/bench_serve.py)
+        lens = [args.prompt_len if i % 2 == 0
+                else max(1, args.prompt_len + seg // 2)
+                for i in range(args.requests)]
+        reqs = [Request(req_id=f"r{i}",
+                        prompt=rng.integers(8, cfg.vocab, (L,)).astype("int32"),
+                        max_new=args.max_new)
+                for i, L in enumerate(lens)]
+        t0 = time.perf_counter()
+        n_tok = 0
+        firsts = {}
+        outs = {r.req_id: [] for r in reqs}
+        for ev in eng.serve(reqs, n_slots=args.slots, chunk=args.chunk):
+            n_tok += 1
+            outs[ev.req_id].append(ev.token)
+            firsts.setdefault(ev.req_id, time.perf_counter() - t0)
+            if ev.done:
+                print(f"{ev.req_id}: done ({ev.index + 1} tokens, "
+                      f"ttft={firsts[ev.req_id]:.2f}s) "
+                      f"first 8: {outs[ev.req_id][:8]}")
+        dt = time.perf_counter() - t0
+        print(f"arch={cfg.name} mode={args.serve_mode} slots={args.slots} "
+              f"requests={args.requests}")
+        print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+        return
+
+    prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
+                                 (args.batch, args.prompt_len), 8, cfg.vocab)
     t0 = time.perf_counter()
-    res = eng.generate(prompts, args.max_new)
+    res = eng.generate(prompts, args.max_new, temperature=args.temperature,
+                       top_k=args.top_k, seed=args.seed)
     dt = time.perf_counter() - t0
     print(f"arch={cfg.name} mode={args.serve_mode} schedule={res.schedule} "
           f"prefill_segments={res.prefill_segments}")

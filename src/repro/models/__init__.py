@@ -1,4 +1,4 @@
 from repro.models.model import (init_params, param_specs, init_state,
                                 forward_hidden, lm_loss, last_logits,
                                 decode_state_init, decode_step, flush_segment,
-                                encode)
+                                mask_decode_state, encode)

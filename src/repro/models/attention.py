@@ -205,18 +205,35 @@ def kv_cache_init(batch: int, max_len: int, cfg, dtype) -> Dict:
 def decode_attention(x, p, cfg, cache: Dict, pos: jax.Array):
     """Decode step for Tq >= 1 queries (Tq=1: autoregressive decode; Tq>1:
     chunked prefill / ARMT memory-token flush). x: [B,Tq,D]; pos: scalar
-    int32 = number of tokens already in the cache. Returns (out, new_cache)."""
+    int32 = number of tokens already in the cache, or int32 [B] vector of
+    per-row positions (continuous-batching slots at heterogeneous phases).
+    Returns (out, new_cache)."""
     B, Tq, _ = x.shape
     q, k, v = _project_qkv(x, p, cfg)
-    q, k = rope_qk(q, k, cfg, (pos + jnp.arange(Tq))[None])
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
-    S = ck.shape[1]
-    kpos = jnp.arange(S)[None, :]                                  # [1,S]
-    qpos = (pos + jnp.arange(Tq))[:, None]                         # [Tq,1]
-    mask = kpos <= qpos
-    if cfg.sliding_window > 0:
-        mask &= kpos > (qpos - cfg.sliding_window)
-    o = sdpa(q, ck, cv, mask[None, None])
+    per_slot = getattr(pos, "ndim", 0) == 1
+    if per_slot:
+        positions = pos[:, None] + jnp.arange(Tq)[None, :]         # [B,Tq]
+        q, k = rope_qk(q, k, cfg, positions)
+        upd = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(
+            c, u, s, axis=0))
+        ck, cv = upd(cache["k"], k, pos), upd(cache["v"], v, pos)
+        qpos = positions[:, :, None]                               # [B,Tq,1]
+        kpos = jnp.arange(ck.shape[1])[None, None, :]              # [1,1,S]
+        mask = kpos <= qpos
+        if cfg.sliding_window > 0:
+            mask &= kpos > (qpos - cfg.sliding_window)
+        mask = mask[:, None]                                       # [B,1,Tq,S]
+    else:
+        q, k = rope_qk(q, k, cfg, (pos + jnp.arange(Tq))[None])
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        S = ck.shape[1]
+        kpos = jnp.arange(S)[None, :]                              # [1,S]
+        qpos = (pos + jnp.arange(Tq))[:, None]                     # [Tq,1]
+        mask = kpos <= qpos
+        if cfg.sliding_window > 0:
+            mask &= kpos > (qpos - cfg.sliding_window)
+        mask = mask[None, None]
+    o = sdpa(q, ck, cv, mask)
     o = o.reshape(B, Tq, cfg.n_heads * cfg.head_dim)
     return jnp.einsum("bte,ed->btd", o, p["wo"]), {"k": ck, "v": cv}

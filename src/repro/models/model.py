@@ -282,9 +282,14 @@ def last_logits(params: Dict, cfg: ArchConfig, hidden: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def decode_state_init(cfg: ArchConfig, batch: int, *, serve_mode: str,
-                      max_len: int, dtype) -> Dict:
+                      max_len: int, dtype, per_slot_pos: bool = False) -> Dict:
     """Per-layer decode state. serve_mode 'cache': full KV cache of max_len.
-    serve_mode 'armt': associative memory + current-segment cache."""
+    serve_mode 'armt': associative memory + current-segment cache.
+
+    per_slot_pos: position as an int32 [batch] vector instead of a scalar —
+    each batch row (decode slot) tracks its own in-segment position, so a
+    continuous-batching scheduler can pack requests at heterogeneous segment
+    phases into one state (serve/scheduler.py)."""
     layout = StackLayout.from_config(cfg)
     hd = cfg.head_dim if cfg.n_heads > 0 else 0
     kv = max(cfg.n_kv_heads, 1)
@@ -311,8 +316,46 @@ def decode_state_init(cfg: ArchConfig, batch: int, *, serve_mode: str,
         pattern.append(jax.tree_util.tree_map(
             lambda a: jnp.zeros((layout.n_super,) + a.shape, a.dtype), st))
     state["pattern"] = tuple(pattern)
-    state["pos"] = jnp.zeros((), jnp.int32)   # position (global or in-segment)
+    # position (global or in-segment); [batch] when per-slot
+    state["pos"] = jnp.zeros((batch,) if per_slot_pos else (), jnp.int32)
     return state
+
+
+def mask_decode_state(mask: jax.Array, new_state: Dict, old_state: Dict) -> Dict:
+    """Per-row merge of two decode states: rows where ``mask`` is True take
+    ``new_state``, others keep ``old_state``. mask: bool [B].
+
+    Handles the three leaf layouts of a decode state: prelude leaves
+    [B, ...], pattern leaves [n_super, B, ...], and ``pos`` ([B] or scalar —
+    a scalar pos is merged only if the whole mask agrees, which per-slot
+    callers never rely on; they use per_slot_pos states)."""
+    def sel(axis):
+        def one(n, o):
+            shape = [1] * n.ndim
+            shape[axis] = mask.shape[0]
+            return jnp.where(mask.reshape(shape), n, o)
+        return one
+
+    out = {
+        "prelude": jax.tree_util.tree_map(sel(0), tuple(new_state["prelude"]),
+                                          tuple(old_state["prelude"])),
+        "pattern": jax.tree_util.tree_map(sel(1), tuple(new_state["pattern"]),
+                                          tuple(old_state["pattern"])),
+    }
+    if "pos" in new_state:
+        np_, op = new_state["pos"], old_state["pos"]
+        out["pos"] = jnp.where(mask, np_, op) if np_.ndim else jnp.where(
+            mask.all(), np_, op)
+    return out
+
+
+def _pos_embed_slice(table: jax.Array, pos: jax.Array, T: int) -> jax.Array:
+    """Slice T rows of a learned position table starting at ``pos`` (scalar)
+    or per-row at ``pos[b]`` (vector) -> [1 or B, T, D]."""
+    if getattr(pos, "ndim", 0) == 1:
+        return jax.vmap(lambda p: jax.lax.dynamic_slice_in_dim(
+            table, p, T, axis=0))(pos)
+    return jax.lax.dynamic_slice_in_dim(table, pos, T, axis=0)[None]
 
 
 def make_decode_apply(cfg: ArchConfig, serve_mode: str, pos):
@@ -368,8 +411,7 @@ def decode_step(params: Dict, cfg: ArchConfig, state: Dict,
     Tq = toks.shape[1]
     x = params["embed"][toks]                                    # [B,Tq,D]
     if "pos_embed" in params:
-        x = x + jax.lax.dynamic_slice_in_dim(
-            params["pos_embed"], pos, Tq, axis=0)[None].astype(x.dtype)
+        x = x + _pos_embed_slice(params["pos_embed"], pos, Tq).astype(x.dtype)
     apply = make_decode_apply(cfg, serve_mode, pos)
     exec_params = {"prelude": params["prelude"], "pattern": params["pattern"]}
     exec_state = {"prelude": state["prelude"], "pattern": state["pattern"]}
@@ -381,22 +423,32 @@ def decode_step(params: Dict, cfg: ArchConfig, state: Dict,
     return logits, new_state
 
 
-def flush_segment(params: Dict, cfg: ArchConfig, state: Dict):
+def flush_segment(params: Dict, cfg: ArchConfig, state: Dict,
+                  slot_mask: Optional[jax.Array] = None):
     """ARMT segment boundary: run the memory tokens through the stack against
     the current-segment cache, delta-update every layer's (A, z), then reset
-    the segment cache and position."""
+    the segment cache and position.
+
+    slot_mask: optional bool [B] — flush only those batch rows (decode
+    slots), keeping the other rows' state/cache/pos untouched. The flush is
+    computed for every row and merged with ``jnp.where`` so heterogeneous
+    slots hitting segment boundaries at different steps stay inside one
+    jitted step (no host branching); requires a per-slot ``pos`` vector."""
     assert cfg.armt is not None
+    assert slot_mask is None or state["pos"].ndim == 1, (
+        "flush_segment(slot_mask=...) needs a per-slot pos vector "
+        "(decode_state_init(per_slot_pos=True)); a scalar pos cannot be "
+        "reset per-row and would silently re-flush every step")
     layout = StackLayout.from_config(cfg)
     M = cfg.armt.num_mem_tokens
-    B = state["pos"].shape or None
     mem = params["mem_tokens"]
     # infer batch from any cache leaf
     first = jax.tree_util.tree_leaves(state["pattern"])[0]
     batch = first.shape[1]
     x = jnp.broadcast_to(mem[None], (batch, M, mem.shape[-1]))
     if "pos_embed" in params:
-        x = x + jax.lax.dynamic_slice_in_dim(
-            params["pos_embed"], state["pos"], M, axis=0)[None].astype(x.dtype)
+        x = x + _pos_embed_slice(params["pos_embed"], state["pos"],
+                                 M).astype(x.dtype)
 
     pos = state["pos"]
     base_apply = make_decode_apply(cfg, "armt", pos)
@@ -415,5 +467,8 @@ def flush_segment(params: Dict, cfg: ArchConfig, state: Dict):
     exec_params = {"prelude": params["prelude"], "pattern": params["pattern"]}
     exec_state = {"prelude": state["prelude"], "pattern": state["pattern"]}
     _, fin = run_sequential(layout, exec_params, exec_state, x[None], apply)
-    return {"prelude": fin["prelude"], "pattern": fin["pattern"],
-            "pos": jnp.zeros((), jnp.int32)}
+    flushed = {"prelude": fin["prelude"], "pattern": fin["pattern"],
+               "pos": jnp.zeros_like(state["pos"])}
+    if slot_mask is None:
+        return flushed
+    return mask_decode_state(slot_mask, flushed, state)

@@ -1,1 +1,2 @@
 from repro.serve.engine import ServeEngine, GenerationResult
+from repro.serve.scheduler import (ContinuousScheduler, Request, StreamEvent)

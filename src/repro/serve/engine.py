@@ -5,11 +5,20 @@ one long request keeps the GPU/TPU busy without cross-request batching),
 then transplants the executor's per-layer memory states into the decode
 state; the prompt tail and new tokens run through `decode_step`, with ARMT
 segment flushes at segment boundaries (constant memory in context length).
+
+Decode runs entirely on device: a `jax.lax.scan` over steps with the state
+donated to the jitted loop, segment flushes folded in as a `lax.cond`, and
+greedy/temperature/top-k sampling applied to the logits on device — the
+host sees tokens once per `generate` call (zero per-token device->host
+transfers), not once per token.
+
+Multi-request continuous batching lives in `serve/scheduler.py`; the
+`ServeEngine.serve(requests)` iterator is the streaming front door.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Iterable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +64,17 @@ class ServeEngine:
     def __init__(self, params, cfg: ArchConfig, *, serve_mode: str = "armt",
                  schedule: str = "diagonal", max_len: int = 8192,
                  grouped_impl: Optional[str] = None):
+        if serve_mode not in ("armt", "cache"):
+            raise ValueError(f"unknown serve_mode {serve_mode!r}")
+        if serve_mode == "armt" and cfg.armt is None and not cfg.is_recurrent:
+            # used to silently fall back to seg_len=1024: attention layers
+            # then never flush and segments of the prefill are disconnected
+            # contexts — constant-memory serving is simply undefined here
+            raise ValueError(
+                f"serve_mode='armt' needs recurrent layer state, but "
+                f"{cfg.name} has cfg.armt=None and non-SSM layers — pass "
+                "serve_mode='cache' for full-KV decoding or add an "
+                "ARMTConfig to the arch")
         self.params = params
         self.cfg = cfg
         self.serve_mode = serve_mode
@@ -63,11 +83,17 @@ class ServeEngine:
         # 'fused' routes diagonal prefill through the grouped Pallas kernels
         # (models/grouped_blocks.py); None defers to cfg.grouped_impl.
         self.grouped_impl = grouped_impl
-        self.seg_len = cfg.armt.segment_len if cfg.armt else 1024
+        # pure-SSM archs have no segment boundaries: state carries across
+        # arbitrary chunk sizes, so 'one chunk' (max_len) replaces the old
+        # silent seg_len=1024 fallback
+        self.seg_len = cfg.armt.segment_len if cfg.armt else max_len
         self._step = jax.jit(
             lambda p, s, t: decode_step(p, cfg, s, t, serve_mode=serve_mode))
         self._flush = jax.jit(
             lambda p, s: flush_segment(p, cfg, s)) if cfg.armt else None
+        self._loops: Dict = {}    # (max_new, greedy, top_k) -> jitted loop
+        self._sched_fns: Dict = {}   # chunk -> jitted scheduler fns (shared
+        #                              across serve() calls / slot counts)
 
     def prefill(self, prompts: jax.Array, enc_frames=None):
         """prompts: [B, P]. Returns (next_token_logits, decode_state)."""
@@ -120,19 +146,92 @@ class ServeEngine:
             dstate, pos = self._maybe_flush(dstate, pos)
         return logits, dstate, pos
 
-    def generate(self, prompts: jax.Array, max_new: int,
+    # ------------------------------------------------------------------
+    # On-device decode loop
+    # ------------------------------------------------------------------
+
+    def _decode_loop(self, max_new: int, greedy: bool, top_k: int):
+        """Build (and cache) the jitted whole-decode loop: a lax.scan over
+        steps that samples, steps, and flushes at segment boundaries via
+        lax.cond — no host branching, no per-token device->host transfer.
+        The decode state is donated to the loop (freely overwritten in
+        place on backends that support donation)."""
+        key_ = (max_new, greedy, top_k)
+        if key_ in self._loops:
+            return self._loops[key_]
+        cfg, serve_mode, seg_len = self.cfg, self.serve_mode, self.seg_len
+        armt_on = serve_mode == "armt" and cfg.armt is not None
+
+        def loop(params, dstate, logits0, temp, rng):
+            def sample(logits, k):
+                # `temp` stays a traced scalar so changing the temperature
+                # value never recompiles; greedy vs sampling is a different
+                # graph (keyed in self._loops)
+                if greedy:
+                    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                scaled = logits / temp
+                if top_k > 0:
+                    kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+                    scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+                return jax.random.categorical(k, scaled, -1).astype(jnp.int32)
+
+            def body(carry, key_t):
+                state, tok = carry
+                logits, state = decode_step(params, cfg, state, tok,
+                                            serve_mode=serve_mode)
+                if armt_on:
+                    state = jax.lax.cond(
+                        state["pos"] >= seg_len,
+                        lambda s: flush_segment(params, cfg, s),
+                        lambda s: s, state)
+                nxt = sample(logits, key_t)
+                return (state, nxt), nxt
+
+            # token 0 comes from the prefill logits; the scan emits the
+            # max_new-1 stepped samples, so the last emitted token is never
+            # fed through a wasted forward
+            keys = jax.random.split(rng, max_new)
+            tok0 = sample(logits0, keys[0])
+            (_, _), toks = jax.lax.scan(body, (dstate, tok0), keys[1:])
+            return jnp.concatenate([tok0[None], toks], axis=0).T  # [B, max_new]
+
+        # donation is a no-op (with a warning) on CPU — only request it where
+        # the backend honors it
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        self._loops[key_] = jax.jit(loop, donate_argnums=donate)
+        return self._loops[key_]
+
+    def generate(self, prompts: jax.Array, max_new: int, *,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  enc_frames=None) -> GenerationResult:
-        logits, dstate, pos = self._prefill(prompts, enc_frames=enc_frames)
-        B = prompts.shape[0]
-        out = np.zeros((B, max_new), np.int32)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        for i in range(max_new):
-            out[:, i] = np.asarray(tok)
-            if i == max_new - 1:
-                break
-            logits, dstate = self._step(self.params, dstate, tok)
-            pos += 1
-            dstate, pos = self._maybe_flush(dstate, pos)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return GenerationResult(out, prompts.shape[1] // self.seg_len,
+        """Prefill + decode max_new tokens. temperature<=0: greedy (the
+        default, deterministic); otherwise temperature/top-k sampling with
+        an on-device PRNG. One device->host transfer for the whole call."""
+        if (self.serve_mode == "cache"
+                and prompts.shape[1] + max_new > self.max_len):
+            # the KV write offset would clamp at the cache end and silently
+            # corrupt logits — refuse instead
+            raise ValueError(
+                f"prompt_len {prompts.shape[1]} + max_new {max_new} exceeds "
+                f"max_len {self.max_len} of the KV cache")
+        logits, dstate, _pos = self._prefill(prompts, enc_frames=enc_frames)
+        loop = self._decode_loop(max_new, temperature <= 0.0, top_k)
+        toks = loop(self.params, dstate, logits,
+                    jnp.float32(max(temperature, 1e-6)),
+                    jax.random.PRNGKey(seed))
+        return GenerationResult(np.asarray(toks),
+                                prompts.shape[1] // self.seg_len,
                                 self.schedule)
+
+    # ------------------------------------------------------------------
+    # Continuous batching
+    # ------------------------------------------------------------------
+
+    def serve(self, requests: Iterable, *, n_slots: int = 4,
+              chunk: int = 8) -> Iterator:
+        """Continuous-batching streaming front door: admit `Request`s into a
+        fixed pool of decode slots and yield `StreamEvent`s as tokens are
+        produced (see serve/scheduler.py for the slot-state invariants)."""
+        from repro.serve.scheduler import ContinuousScheduler
+        sched = ContinuousScheduler(self, n_slots=n_slots, chunk=chunk)
+        return sched.run(requests)

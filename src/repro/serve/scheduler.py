@@ -1,0 +1,219 @@
+"""Continuous-batching scheduler: a fixed pool of decode slots fed from a
+request queue (DESIGN.md §8).
+
+Each slot is one batch row of a pooled decode state and owns the full
+per-request serving state: the ARMT recurrent memory (A, z) / SSM state of
+every layer, the current-segment KV cache, and an *in-segment position* —
+``state['pos']`` is an int32 [n_slots] vector (``per_slot_pos``), so
+requests sit at heterogeneous segment phases inside one jitted step.
+
+The decode loop is a packed ``decode_step`` over all slots followed by a
+``jnp.where``-masked ``flush_segment`` for exactly the slots that crossed a
+segment boundary this step — one compiled graph, no host branching, no
+per-token device->host transfer. Tokens cross to the host once per
+``chunk`` steps (a single transfer of the chunk's token block), which is
+when finished slots are freed and queued requests admitted.
+
+Admission runs the diagonal prefill (ServeEngine._prefill, including the
+fused grouped path when the engine was built with grouped_impl='fused') on
+the new request alone, then transplants the resulting B=1 decode state into
+a free slot of the pool with ``.at[slot].set`` — other slots keep decoding
+across admissions (their rows are untouched).
+
+Slot-state invariants (DESIGN.md §8):
+  * a slot row is meaningful iff its host-side `_Slot.active` is True; an
+    inactive slot's row is garbage and is fully overwritten at admission
+    (every leaf row, pos, and pending token) — nothing is read from it;
+  * inactive slots still flow through the packed step (fixed shapes), but
+    their `pos` is frozen and the flush mask excludes them, so they never
+    flush and their garbage never influences an active row;
+  * per-slot independence of the math itself: all decode ops are
+    batch-row-local. The one exception is MoE with `dispatch='global'` and
+    a tight capacity factor (capacity drops depend on co-batched rows) —
+    serve MoE archs with `dispatch='per_row'` or a dropless capacity if
+    exact single-request equivalence matters;
+  * host mirrors (remaining/active) are advanced from the chunk's emit
+    masks only, so host and device views never need a reconciling sync.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Iterable, Iterator, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, flush_segment
+
+
+@dataclass
+class Request:
+    """One generation request. prompt: int32 [P] token ids (P >= 1)."""
+    req_id: Union[int, str]
+    prompt: np.ndarray
+    max_new: int
+
+
+@dataclass
+class StreamEvent:
+    """One generated token, streamed as soon as its chunk reaches the host."""
+    req_id: Union[int, str]
+    token: int
+    index: int                  # 0-based position within the request's output
+    done: bool                  # True on the request's final token
+
+
+@dataclass
+class _Slot:
+    req_id: Optional[Union[int, str]] = None
+    remaining: int = 0
+    index: int = 0
+    active: bool = False
+    tokens: List[int] = field(default_factory=list)
+
+
+class ContinuousScheduler:
+    """Drives a ServeEngine over many requests with continuous batching."""
+
+    def __init__(self, engine, *, n_slots: int = 4, chunk: int = 8):
+        from repro.models import decode_state_init
+        assert n_slots >= 1 and chunk >= 1
+        self.engine = engine
+        self.n_slots = n_slots
+        self.chunk = chunk
+        cfg = engine.cfg
+        dtype = engine.params["embed"].dtype
+        self.pool = decode_state_init(
+            cfg, n_slots, serve_mode=engine.serve_mode,
+            max_len=engine.max_len, dtype=dtype, per_slot_pos=True)
+        self.tok = jnp.zeros((n_slots,), jnp.int32)      # pending next input
+        self.active = jnp.zeros((n_slots,), bool)
+        self.remaining = jnp.zeros((n_slots,), jnp.int32)
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.free: deque = deque(range(n_slots))
+        # the jitted step/admit functions are cached on the engine (keyed by
+        # chunk) so repeated serve() calls — and schedulers with different
+        # slot counts, which only differ in traced shapes — reuse compiles
+        self._chunk_fn, self._admit_fn = scheduler_fns(engine, chunk)
+
+    # ------------------------------------------------------------------
+    # Host-side driver
+    # ------------------------------------------------------------------
+
+    def _admit(self, req: Request) -> None:
+        assert req.max_new >= 1, f"{req.req_id}: max_new must be >= 1"
+        prompt = np.asarray(req.prompt, np.int32)
+        assert prompt.ndim == 1 and prompt.shape[0] >= 1, req.req_id
+        if (self.engine.serve_mode == "cache"
+                and prompt.shape[0] + req.max_new > self.engine.max_len):
+            raise ValueError(
+                f"{req.req_id}: prompt+max_new exceeds max_len "
+                f"{self.engine.max_len} of the KV cache")
+        slot = self.free.popleft()
+        # diagonal prefill of the new request alone; other slots' rows are
+        # untouched and keep decoding across this call
+        logits, one_state, pos = self.engine._prefill(prompt[None])
+        first_tok = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+        self.pool, self.tok, self.active, self.remaining = self._admit_fn(
+            self.pool, self.tok, self.active, self.remaining,
+            jnp.int32(slot), one_state, first_tok,
+            jnp.int32(pos), jnp.int32(req.max_new))
+        s = self.slots[slot]
+        s.req_id, s.remaining, s.index, s.active, s.tokens = (
+            req.req_id, req.max_new, 0, True, [])
+
+    def run(self, requests: Iterable[Request]) -> Iterator[StreamEvent]:
+        """Generator: admits requests as slots free up and yields one
+        StreamEvent per generated token (chunk-granular latency)."""
+        queue = deque(requests)
+        while True:
+            while self.free and queue:
+                self._admit(queue.popleft())
+            if not any(s.active for s in self.slots):
+                if not queue:
+                    return
+                continue
+            (self.pool, self.tok, self.active, self.remaining,
+             toks, masks) = self._chunk_fn(
+                self.engine.params, self.pool, self.tok,
+                self.active, self.remaining)
+            # the single device->host transfer for these `chunk` tokens
+            toks_np = np.asarray(toks)
+            masks_np = np.asarray(masks)
+            for t in range(self.chunk):
+                for b, s in enumerate(self.slots):
+                    if not masks_np[t, b] or not s.active:
+                        continue
+                    s.remaining -= 1
+                    done = s.remaining == 0
+                    tok = int(toks_np[t, b])
+                    s.tokens.append(tok)
+                    yield StreamEvent(s.req_id, tok, s.index, done)
+                    s.index += 1
+                    if done:
+                        s.active = False
+                        self.free.append(b)
+
+
+
+def scheduler_fns(engine, chunk: int):
+    """Build (or fetch from the engine's cache) the jitted packed-chunk and
+    admission functions shared by every scheduler on this engine."""
+    cache = engine._sched_fns
+    if chunk in cache:
+        return cache[chunk]
+    cfg = engine.cfg
+    serve_mode = engine.serve_mode
+    seg_len = engine.seg_len
+    armt_on = serve_mode == "armt" and cfg.armt is not None
+    donate_ok = jax.default_backend() != "cpu"
+
+    def chunk_fn(params, state, tok, active, remaining):
+        def body(carry, _):
+            state, tok, active, remaining = carry
+            emit, emit_mask = tok, active
+            logits, new_state = decode_step(params, cfg, state, tok,
+                                            serve_mode=serve_mode)
+            # freeze inactive slots' positions: they never hit a segment
+            # boundary, so garbage rows never trigger (or mask into) a
+            # flush, and their cache writes stay at one frozen offset
+            new_state["pos"] = jnp.where(active, new_state["pos"],
+                                         state["pos"])
+            if armt_on:
+                boundary = active & (new_state["pos"] >= seg_len)
+                new_state = jax.lax.cond(
+                    boundary.any(),
+                    lambda s: flush_segment(params, cfg, s,
+                                            slot_mask=boundary),
+                    lambda s: s, new_state)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = jnp.where(active, nxt, tok)
+            remaining = remaining - emit_mask.astype(jnp.int32)
+            active = active & (remaining > 0)
+            return (new_state, nxt, active, remaining), (emit, emit_mask)
+
+        (state, tok, active, remaining), (toks, masks) = jax.lax.scan(
+            body, (state, tok, active, remaining), None, length=chunk)
+        return state, tok, active, remaining, toks, masks
+
+    def admit_fn(pool, tok, active, remaining, slot, one_state,
+                 first_tok, pos_val, n_new):
+        prelude = jax.tree_util.tree_map(
+            lambda pl, ol: pl.at[slot].set(ol[0].astype(pl.dtype)),
+            tuple(pool["prelude"]), tuple(one_state["prelude"]))
+        pattern = jax.tree_util.tree_map(
+            lambda pl, ol: pl.at[:, slot].set(ol[:, 0].astype(pl.dtype)),
+            tuple(pool["pattern"]), tuple(one_state["pattern"]))
+        new_pool = {"prelude": prelude, "pattern": pattern,
+                    "pos": pool["pos"].at[slot].set(pos_val)}
+        return (new_pool,
+                tok.at[slot].set(first_tok),
+                active.at[slot].set(True),
+                remaining.at[slot].set(n_new))
+
+    fns = (jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4) if donate_ok else ()),
+           jax.jit(admit_fn, donate_argnums=(0, 1, 2, 3) if donate_ok else ()))
+    cache[chunk] = fns
+    return fns

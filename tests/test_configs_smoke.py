@@ -34,7 +34,12 @@ def test_full_config_is_exact_assignment(arch):
                 cfg.d_ff, cfg.vocab) == (L, d, H, kv, dff, V)
 
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("arch", [
+    # jamba's 8-type pattern makes its forward+train compile dominate the
+    # tier-1 wall-clock — CI still runs it via -m "slow or not slow"
+    pytest.param(a, marks=pytest.mark.slow)
+    if a == "jamba-1.5-large-398b" else a
+    for a in ASSIGNED_ARCHS])
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))

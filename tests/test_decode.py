@@ -1,5 +1,7 @@
 """Serving-path consistency: prefill-via-forward == token-by-token decode,
 ARMT flush at segment boundaries, both serve modes."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,7 +16,6 @@ from repro.serve import ServeEngine
 @pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "falcon-mamba-7b",
                                   "qwen2-moe-a2.7b"])
 def test_prefill_matches_decode(arch):
-    import dataclasses
     cfg = get_smoke_config(arch)
     if cfg.moe is not None:
         # capacity drops depend on how many tokens are batched together
@@ -32,14 +33,21 @@ def test_prefill_matches_decode(arch):
                       max_len=P + 8)
     logits_a, _ = eng.prefill(prompts)
 
+    # jit once — tracing decode_step anew per token is what used to make
+    # this test dominate the tier-1 wall-clock
+    step = jax.jit(lambda s, t: decode_step(params, cfg, s, t,
+                                            serve_mode="armt"))
+    flush = jax.jit(lambda s: flush_segment(params, cfg, s))
     st = decode_state_init(cfg, B, serve_mode="armt", max_len=P + 8,
                            dtype=jnp.float32)
     logits_b = None
+    pos = 0
     for t in range(P):
-        logits_b, st = decode_step(params, cfg, st, prompts[:, t],
-                                   serve_mode="armt")
-        if cfg.armt and int(st["pos"]) >= seg:
-            st = flush_segment(params, cfg, st)
+        logits_b, st = step(st, prompts[:, t])
+        pos += 1
+        if cfg.armt and pos >= seg:
+            st = flush(st)
+            pos = 0
     rel = float(jnp.abs(logits_a - logits_b).max()
                 / (jnp.abs(logits_b).max() + 1e-9))
     assert rel < 1e-3, f"{arch}: prefill/decode mismatch rel={rel}"
@@ -48,7 +56,6 @@ def test_prefill_matches_decode(arch):
 
 def test_cache_mode_matches_full_forward():
     """'cache' decode over a prompt == full-attention forward logits."""
-    import dataclasses
     from repro.models import forward_hidden, last_logits
     cfg = dataclasses.replace(get_smoke_config("h2o-danube-1.8b"), armt=None)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -57,12 +64,13 @@ def test_cache_mode_matches_full_forward():
     hidden, _ = forward_hidden(params, cfg, prompts, mode="full")
     want = last_logits(params, cfg, hidden)
 
+    step = jax.jit(lambda s, t: decode_step(params, cfg, s, t,
+                                            serve_mode="cache"))
     st = decode_state_init(cfg, B, serve_mode="cache", max_len=P + 4,
                            dtype=jnp.float32)
     got = None
     for t in range(P):
-        got, st = decode_step(params, cfg, st, prompts[:, t],
-                              serve_mode="cache")
+        got, st = step(st, prompts[:, t])
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=1e-3, rtol=1e-3)
 
@@ -76,6 +84,27 @@ def test_generate_shapes_and_determinism():
     r2 = eng.generate(prompts, 8)
     assert r1.tokens.shape == (2, 8)
     np.testing.assert_array_equal(r1.tokens, r2.tokens)
+
+
+def test_engine_rejects_armt_mode_without_recurrent_state():
+    """Regression: serve_mode='armt' on an attention arch without cfg.armt
+    used to silently fall back to seg_len=1024 — attention layers then never
+    flush and prefill segments become disconnected contexts. It must raise.
+    Pure-SSM archs (falcon-mamba) stay valid: their recurrence needs no
+    ARMT config."""
+    cfg = dataclasses.replace(get_smoke_config("h2o-danube-1.8b"), armt=None)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="armt"):
+        ServeEngine(params, cfg, serve_mode="armt", max_len=64)
+    # cache mode on the same config stays valid
+    ServeEngine(params, cfg, serve_mode="cache", max_len=64)
+    with pytest.raises(ValueError, match="serve_mode"):
+        ServeEngine(params, cfg, serve_mode="bogus", max_len=64)
+    # pure-SSM: armt serving without an ARMT config is well-defined
+    mcfg = dataclasses.replace(get_smoke_config("falcon-mamba-7b"), armt=None)
+    mparams = init_params(mcfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(mparams, mcfg, serve_mode="armt", max_len=64)
+    assert eng.seg_len == 64            # one chunk, no fake 1024 boundary
 
 
 def test_armt_decode_state_is_constant_in_context():

@@ -1,12 +1,16 @@
 """THE core invariant: run_diagonal == run_sequential exactly (pure
-reordering, paper §3) — property-tested over stack shapes, including
-heterogeneous patterns and preludes."""
+reordering, paper §3).
+
+The deterministic parametrized grid below always runs (no optional deps) —
+the suite used to guard this invariant only behind `importorskip
+("hypothesis")`, which silently skipped it on minimal installs. The
+hypothesis fuzz on top widens coverage when the `[test]` extra is
+installed (CI installs it and fails if it is missing).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional test extra ([test] in pyproject)
-from hypothesis import given, settings, strategies as st
 
 from repro.core import StackLayout, run_diagonal, run_sequential
 
@@ -35,17 +39,10 @@ def _build(layout, key, D):
     return params, state
 
 
-@given(
-    st.integers(1, 6),                        # segments
-    st.integers(1, 3),                        # n_super
-    st.sampled_from([("a",), ("a", "b"), ("a", "b", "c"), ("b", "b")]),
-    st.sampled_from([(), ("a",), ("c", "a")]),
-)
-@settings(max_examples=15, deadline=None)
-def test_diagonal_equals_sequential(S, n_super, pattern, prelude):
-    layout = StackLayout(prelude=prelude, pattern=pattern, n_super=n_super)
+def _check_equal(layout, S):
     B, T, D = 2, 3, 8
-    params, state0 = _build(layout, jax.random.PRNGKey(S * 7 + n_super), D)
+    params, state0 = _build(layout, jax.random.PRNGKey(S * 7 + layout.n_super),
+                            D)
     segs = jax.random.normal(jax.random.PRNGKey(99), (S, B, T, D))
     ys_s, st_s = run_sequential(layout, params, state0, segs, _toy_apply)
     ys_d, st_d = run_diagonal(layout, params, state0, segs, _toy_apply)
@@ -55,6 +52,42 @@ def test_diagonal_equals_sequential(S, n_super, pattern, prelude):
         lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                                 atol=1e-6, rtol=1e-6),
         st_s, st_d)
+
+
+# Deterministic coverage of the shape space: fewer segments than layers
+# (mostly fill/drain), more segments than layers, heterogeneous patterns,
+# repeated types, and preludes.
+@pytest.mark.parametrize("S,n_super,pattern,prelude", [
+    (1, 1, ("a",), ()),                       # single cell
+    (2, 3, ("a",), ()),                       # S < L (fill/drain dominated)
+    (6, 1, ("a", "b"), ()),                   # S > L, heterogeneous pattern
+    (4, 2, ("a", "b", "c"), ()),              # 3-type pattern
+    (3, 2, ("b", "b"), ("a",)),               # repeated type + prelude
+    (5, 3, ("a", "b"), ("c", "a")),           # deep stack + 2-layer prelude
+])
+def test_diagonal_equals_sequential(S, n_super, pattern, prelude):
+    layout = StackLayout(prelude=prelude, pattern=pattern, n_super=n_super)
+    _check_equal(layout, S)
+
+
+def test_diagonal_equals_sequential_fuzz():
+    """Hypothesis widening of the deterministic grid (test extra)."""
+    hyp = pytest.importorskip("hypothesis")  # [test] extra in pyproject
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        st.integers(1, 6),                    # segments
+        st.integers(1, 3),                    # n_super
+        st.sampled_from([("a",), ("a", "b"), ("a", "b", "c"), ("b", "b")]),
+        st.sampled_from([(), ("a",), ("c", "a")]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def fuzz(S, n_super, pattern, prelude):
+        layout = StackLayout(prelude=prelude, pattern=pattern,
+                             n_super=n_super)
+        _check_equal(layout, S)
+
+    fuzz()
 
 
 def test_gradients_flow_through_both():
@@ -85,3 +118,38 @@ def test_remat_matches():
     y1, _ = run_diagonal(layout, params, state0, segs, _toy_apply, remat=False)
     y2, _ = run_diagonal(layout, params, state0, segs, _toy_apply, remat=True)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+def test_padded_slots_do_not_poison_group_coupled_apply():
+    """Regression: invalid fill/drain slots used to be cleared with
+    ``buf * valid`` — a block that emits inf/NaN on empty padding (as a
+    fused-kernel epilogue or a global MoE router does) then left
+    ``0 * inf = nan`` in the buffer, which poisons any group-coupled
+    application on the next step. With the jnp.where clear, padding enters
+    every grouped application as exact zeros and outputs stay finite."""
+    layout = StackLayout(prelude=(), pattern=("a",), n_super=3)   # L = 3
+    S, B, T, D = 4, 2, 3, 8
+    params, state0 = _build(layout, jax.random.PRNGKey(5), D)
+    segs = jax.random.normal(jax.random.PRNGKey(6), (S, B, T, D))
+
+    def seeded_apply(t, p, x, st):
+        y, new = _toy_apply(t, p, x, st)
+        # a kernel fed an all-zero padded slot emits -inf (e.g. log/softmax
+        # of an empty row)
+        empty = jnp.abs(x).sum() == 0
+        return jnp.where(empty, -jnp.inf, y), new
+
+    def grouped_apply(t, pp, x, ss):
+        # per-slot math ...
+        y, st = jax.vmap(lambda p, xx, s: seeded_apply(t, p, xx, s))(
+            pp, x, ss)
+        # ... plus a group-coupled epilogue statistic over the WHOLE group
+        # input (the shape of a global MoE router / grouped attention
+        # normalizer): one NaN slot poisons every slot
+        return y / (1.0 + jnp.abs(x).mean()), st
+
+    ys, fin = run_diagonal(layout, params, state0, segs, seeded_apply,
+                           grouped_apply=grouped_apply)
+    assert bool(jnp.isfinite(ys).all()), "padded slots leaked inf/nan"
+    for leaf in jax.tree_util.tree_leaves(fin):
+        assert bool(jnp.isfinite(leaf).all())

@@ -98,6 +98,7 @@ with mesh:
 """
 
 
+@pytest.mark.slow
 def test_small_mesh_train_step_compiles():
     r = subprocess.run([sys.executable, "-c", SMALL_MESH_SCRIPT],
                        capture_output=True, text=True, timeout=420,

@@ -42,6 +42,7 @@ def test_checkpoint_resume_continues(tmp_path):
     assert len(lines) >= 15
 
 
+@pytest.mark.slow
 def test_needle_loss_improves_with_training():
     """Train the reduced ARMT on needle-QA where the needle sits in an
     *earlier segment* than the query — solvable only via memory."""
