@@ -1,14 +1,23 @@
 """Continuous-batching serving benchmark -> ``BENCH_serve.json``
-(EXPERIMENTS.md §Serving).
+(EXPERIMENTS.md §Serving, §Prefix-cache).
 
 For each concurrency level (number of decode slots) the same request set —
 heterogeneous prompt lengths, all queued at t=0 — is pushed through
 ``ServeEngine.serve``; we record aggregate decode throughput (tok/s),
-per-request time-to-first-token (first streamed event; chunk-granular by
-design), and per-request completion latency. A one-request-at-a-time
-`generate` pass over the identical set is the no-continuous-batching
-baseline. A warmup pass absorbs compilation so the numbers measure the
-steady state.
+per-request time-to-first-token and tokens/sec (read off the stream's own
+``StreamEvent`` metrics — host-clock, chunk-granular by design), and
+per-request completion latency. A one-request-at-a-time `generate` pass
+over the identical set is the no-continuous-batching baseline. A warmup
+pass absorbs compilation so the numbers measure the steady state.
+
+Two state-store workloads (serve/state_store.py):
+  * shared_prefix — N requests sharing a multi-segment system prompt;
+    cold admission (PR 2 path: full diagonal prefill per request) vs a
+    prefix-cached engine where admissions after the first transplant the
+    boundary snapshot and prefill only the uncached tail. The metric is
+    admission time = ``GenerationResult.ttft_s``.
+  * multi_turn — a T-turn conversation; re-prefill-the-history baseline vs
+    session-store resume (O(new turn) admission).
 """
 from __future__ import annotations
 
@@ -23,7 +32,7 @@ import numpy as np
 from benchmarks.common import row
 from repro.configs import ARMTConfig, get_smoke_config
 from repro.models import init_params
-from repro.serve import Request, ServeEngine
+from repro.serve import PrefixCache, Request, ServeEngine, SessionStore
 
 SEG = 32
 
@@ -48,23 +57,125 @@ def _requests(cfg, n, max_new, seed=0):
 
 
 def _drive(eng, reqs, n_slots, chunk):
+    # per-request timings come from the stream's own metrics (StreamEvent
+    # ttft_s / tok_s) — the bench no longer re-derives them externally
     t0 = time.perf_counter()
-    ttft, done_at, n_tok = {}, {}, 0
+    ttft, tok_s, done_at, n_tok = {}, {}, {}, 0
     for ev in eng.serve(reqs, n_slots=n_slots, chunk=chunk):
-        now = time.perf_counter() - t0
         n_tok += 1
-        ttft.setdefault(ev.req_id, now)
         if ev.done:
-            done_at[ev.req_id] = now
+            ttft[ev.req_id] = ev.ttft_s
+            tok_s[ev.req_id] = ev.tok_s
+            done_at[ev.req_id] = time.perf_counter() - t0
     wall = time.perf_counter() - t0
     return {
         "wall_s": wall,
         "throughput_tok_s": n_tok / wall,
         "ttft_s_mean": float(np.mean(list(ttft.values()))),
         "ttft_s_max": float(np.max(list(ttft.values()))),
+        "request_tok_s_mean": float(np.mean(list(tok_s.values()))),
         "latency_s_mean": float(np.mean(list(done_at.values()))),
         "latency_s_max": float(np.max(list(done_at.values()))),
     }
+
+
+def _bench_shared_prefix(cfg, params, quick: bool):
+    """Admission time (TTFT) for requests sharing a system prompt: cold
+    (every admission re-prefills the shared segments — the PR 2 path) vs
+    prefix-cached (admissions after the first transplant the snapshot)."""
+    n_sys_seg = 4 if quick else 8
+    n_req = 6 if quick else 12
+    max_new = 8
+    tail = SEG // 2
+    rng = np.random.default_rng(3)
+    sys_prompt = rng.integers(8, cfg.vocab, (n_sys_seg * SEG,)).astype(np.int32)
+    prompts = [np.concatenate([sys_prompt,
+                               rng.integers(8, cfg.vocab, (tail,)).astype(np.int32)])
+               for _ in range(n_req)]
+    max_len = (n_sys_seg + 2) * SEG + max_new
+
+    def run(engine):
+        # warmup absorbs compiles (same shapes, different tokens/prefix)
+        warm_p = rng.integers(8, cfg.vocab,
+                              (n_sys_seg * SEG + tail,)).astype(np.int32)
+        engine.generate(warm_p[None], max_new)
+        ttfts, cached = [], []
+        for p in prompts:
+            r = engine.generate(p[None], max_new)
+            ttfts.append(r.ttft_s)
+            cached.append(r.cached_segments)
+        return ttfts, cached
+
+    cold = ServeEngine(params, cfg, serve_mode="armt", max_len=max_len)
+    ttft_cold, _ = run(cold)
+    cache = PrefixCache(SEG, max_bytes=64 << 20)
+    warm = ServeEngine(params, cfg, serve_mode="armt", max_len=max_len,
+                       prefix_cache=cache)
+    ttft_warm, cached = run(warm)
+    # first request is the cold fill; hits are the rest
+    hit_ttft = ttft_warm[1:]
+    rec = {
+        "n_requests": n_req, "system_prompt_segments": n_sys_seg,
+        "tail_tokens": tail, "max_new": max_new,
+        "ttft_s_cold_mean": float(np.mean(ttft_cold)),
+        "ttft_s_first_fill": ttft_warm[0],
+        "ttft_s_hit_mean": float(np.mean(hit_ttft)),
+        "hit_cached_segments": cached[1:],
+        "ttft_reduction_x": float(np.mean(ttft_cold) / np.mean(hit_ttft)),
+        "cache_stats": cache.stats.as_dict(),
+    }
+    row("serve_shared_prefix", rec["ttft_s_hit_mean"],
+        f"ttft cold={rec['ttft_s_cold_mean']:.3f}s "
+        f"hit={rec['ttft_s_hit_mean']:.3f}s "
+        f"({rec['ttft_reduction_x']:.1f}x)")
+    return rec
+
+
+def _bench_multi_turn(cfg, params, quick: bool):
+    """T-turn chat: session-store resume vs re-prefilling the full history
+    each turn. Outputs are asserted token-identical between the two."""
+    n_turns = 3 if quick else 5
+    turn_len = SEG
+    max_new = 8
+    max_len = ((n_turns + 1) * (turn_len + max_new) // SEG + 2) * SEG
+    rng = np.random.default_rng(4)
+    turns = [rng.integers(8, cfg.vocab, (turn_len,)).astype(np.int32)
+             for _ in range(n_turns)]
+
+    store = SessionStore(max_bytes=128 << 20)
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=max_len,
+                      session_store=store)
+    # warmup: same turn shapes under a throwaway session
+    for t in turns:
+        eng.generate(rng.integers(8, cfg.vocab, (turn_len,))[None].astype(np.int32),
+                     max_new, session_id="warm")
+
+    ttft_resume, ttft_full, outs = [], [], []
+    for i, t in enumerate(turns):
+        r = eng.generate(t[None], max_new, session_id="chat")
+        ttft_resume.append(r.ttft_s)
+        outs.append(r.tokens[0])
+    history = np.empty(0, np.int32)
+    for i, t in enumerate(turns):
+        prompt = np.concatenate([history, t])
+        r = eng.generate(prompt[None], max_new)    # no session: full prefill
+        ttft_full.append(r.ttft_s)
+        assert (r.tokens[0] == outs[i]).all(), \
+            f"turn {i}: session resume diverged from full-history prefill"
+        history = np.concatenate([prompt, r.tokens[0]]).astype(np.int32)
+    rec = {
+        "n_turns": n_turns, "turn_tokens": turn_len, "max_new": max_new,
+        "ttft_s_resume": ttft_resume, "ttft_s_full_prefill": ttft_full,
+        "ttft_s_resume_mean_after_first": float(np.mean(ttft_resume[1:])),
+        "ttft_s_full_mean_after_first": float(np.mean(ttft_full[1:])),
+        "ttft_reduction_x_last_turn": ttft_full[-1] / ttft_resume[-1],
+        "final_history_tokens": int(history.shape[0]),
+    }
+    row("serve_multi_turn", rec["ttft_s_resume_mean_after_first"],
+        f"resume={rec['ttft_s_resume_mean_after_first']:.3f}s "
+        f"full={rec['ttft_s_full_mean_after_first']:.3f}s "
+        f"(turn {n_turns}: {rec['ttft_reduction_x_last_turn']:.1f}x)")
+    return rec
 
 
 def bench_serve(quick: bool = True, out_path: str | None = None):
@@ -108,6 +219,9 @@ def bench_serve(quick: bool = True, out_path: str | None = None):
             f"{rec['throughput_tok_s']:.1f} tok/s "
             f"ttft={rec['ttft_s_mean']:.3f}s")
 
+    shared_prefix = _bench_shared_prefix(cfg, params, quick)
+    multi_turn = _bench_multi_turn(cfg, params, quick)
+
     # own env var — sharing BENCH_OUT with bench_diagonal would make the two
     # benches overwrite each other's artifact under benchmarks.run
     out_path = out_path or os.environ.get("BENCH_SERVE_OUT",
@@ -121,6 +235,8 @@ def bench_serve(quick: bool = True, out_path: str | None = None):
                   "num_mem_tokens": cfg.armt.num_mem_tokens},
         "baseline_one_by_one_tok_s": baseline_tok_s,
         "results": results,
+        "shared_prefix": shared_prefix,
+        "multi_turn": multi_turn,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)

@@ -9,17 +9,30 @@
   §Roofline bench_roofline          dry-run artifact aggregation
   §Perf    bench_diagonal           sequential vs diagonal-vmap vs
                                     diagonal-fused -> BENCH_diagonal.json
-  §Serving bench_serve              continuous-batching throughput/TTFT/
-                                    latency vs slots -> BENCH_serve.json
+  §Serving bench_serve              continuous-batching + prefix-cache +
+                                    session workloads -> BENCH_serve.json
 
 ``QUICK=0 python -m benchmarks.run`` for full sizes.
+``python -m benchmarks.run --only serve`` (repeatable, comma-ok) runs a
+subset — e.g. just the serve benches in CI, whose JSON is uploaded as a
+workflow artifact.
 """
+import argparse
 import os
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="NAME",
+                    help="run only these benches (by short name: "
+                         "grouped_gemm, attention, inference_scaling, "
+                         "error_accumulation, babilong, roofline, diagonal, "
+                         "serve); repeatable or comma-separated")
+    args = ap.parse_args(argv)
+
     quick = os.environ.get("QUICK", "1") != "0"
     import benchmarks.bench_grouped_gemm as g
     import benchmarks.bench_attention as a
@@ -30,9 +43,21 @@ def main() -> None:
     import benchmarks.bench_diagonal as d
     import benchmarks.bench_serve as sv
 
+    by_name = {"grouped_gemm": g, "attention": a, "inference_scaling": i,
+               "error_accumulation": e, "babilong": b, "roofline": r,
+               "diagonal": d, "serve": sv}
+    mods = list(by_name.values())
+    if args.only:
+        names = [n.strip() for part in args.only for n in part.split(",")]
+        unknown = [n for n in names if n not in by_name]
+        if unknown:
+            ap.error(f"unknown bench(es) {unknown}; "
+                     f"choose from {sorted(by_name)}")
+        mods = [by_name[n] for n in names]
+
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (g, a, i, e, b, r, d, sv):
+    for mod in mods:
         try:
             mod.main(quick=quick)
         except Exception:

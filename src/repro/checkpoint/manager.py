@@ -5,6 +5,12 @@ Layout:  <dir>/step_<n>/manifest.json + leaf_<i>.npy
 Writes go to <dir>/.tmp_step_<n> then os.rename (atomic on POSIX), so a crash
 mid-save never corrupts the latest checkpoint. ``restore`` verifies per-leaf
 sha256 (truncated) recorded in the manifest.
+
+Besides step-numbered training checkpoints there are *named blobs*
+(``save_named``/``restore_named``): flat ``{key: ndarray}`` dicts stored
+under <dir>/named/<digest>/ with the same atomic-rename + hash-verify
+machinery. The serving state store (serve/state_store.py) uses these as its
+disk-spill tier for evicted prefix snapshots and session states.
 """
 from __future__ import annotations
 
@@ -122,3 +128,51 @@ class CheckpointManager:
             tree = jax.tree_util.tree_map(
                 lambda a, s: jax.device_put(a, s), tree, shardings)
         return tree
+
+    # ---------------------------------------------------------- named blobs
+    def _named_dir(self, name: str) -> Path:
+        digest = hashlib.sha256(name.encode()).hexdigest()[:24]
+        return self.dir / "named" / digest
+
+    def save_named(self, name: str, arrays) -> None:
+        """Persist a flat {key: ndarray} dict under an arbitrary string name.
+        Atomic (tmp dir + rename) and hash-verified like step checkpoints;
+        synchronous — callers spill rarely (LRU eviction), not per step."""
+        final = self._named_dir(name)
+        tmp = final.parent / f".tmp_{final.name}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"name": name, "time": time.time(), "leaves": []}
+        for i, (key, arr) in enumerate(arrays.items()):
+            arr = np.asarray(arr)
+            np.save(tmp / f"leaf_{i}.npy", arr)
+            manifest["leaves"].append(
+                {"i": i, "path": key, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype), "sha": _hash(arr)})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        final.parent.mkdir(parents=True, exist_ok=True)
+        os.rename(tmp, final)
+
+    def has_named(self, name: str) -> bool:
+        return (self._named_dir(name) / "manifest.json").exists()
+
+    def restore_named(self, name: str, *, verify: bool = True):
+        """Load a named blob back as a {key: ndarray} dict (insertion order
+        = save order)."""
+        d = self._named_dir(name)
+        if not (d / "manifest.json").exists():
+            raise FileNotFoundError(f"no named blob {name!r} in {self.dir}")
+        manifest = json.loads((d / "manifest.json").read_text())
+        out = {}
+        for leaf in manifest["leaves"]:
+            arr = np.load(d / f"leaf_{leaf['i']}.npy")
+            if verify and _hash(arr) != leaf["sha"]:
+                raise IOError(f"blob corruption at {name!r}/{leaf['path']}")
+            out[leaf["path"]] = arr
+        return out
+
+    def delete_named(self, name: str) -> None:
+        shutil.rmtree(self._named_dir(name), ignore_errors=True)

@@ -3,6 +3,7 @@ batching schedule/executors. See DESIGN.md §2-3."""
 from repro.core.schedule import (StackLayout, diagonal_groups, is_minimal,
                                  validate_schedule, cell_dependencies)
 from repro.core.memory import (dpfp, d_phi, mem_param_init, mem_state_init,
-                               mem_read, mem_update)
+                               mem_read, mem_update, recurrent_state,
+                               RECURRENT_KEYS)
 from repro.core.sequential import run_sequential
-from repro.core.diagonal import run_diagonal
+from repro.core.diagonal import run_diagonal, boundary_states_from_capture

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.memory import recurrent_state
 from repro.core.schedule import StackLayout
 
 ApplyBlock = Callable[[str, Any, jax.Array, Any], tuple]
@@ -33,9 +34,37 @@ def _mask_state(valid, new, old):
     return jax.tree_util.tree_map(sel, new, old)
 
 
+def boundary_states_from_capture(layout: StackLayout, captured: Dict,
+                                 n_segments: int) -> Dict:
+    """Assemble per-segment-boundary recurrent states from a diagonal run's
+    per-step capture (run_diagonal(capture_states=True)).
+
+    In the diagonal schedule, layer at slot l processes segment s at step
+    s + l — so the state "prefix through segment c" is spread across steps:
+    layer l's piece of boundary c was emitted at step (c-1) + l. This gathers
+    those pieces into a tree whose leaves lead with a boundary axis [S, ...]
+    (boundary c at index c-1), entirely device-side: one gather per leaf, no
+    host transfer until the caller moves a snapshot off-device.
+    """
+    S = n_segments
+    steps = jnp.arange(S)
+    prelude = tuple(
+        jax.tree_util.tree_map(lambda a, _j=j: a[steps + _j], captured["prelude"][j])
+        for j in range(len(layout.prelude)))
+    pattern = []
+    for p in range(len(layout.pattern)):
+        slots = jnp.asarray(layout.position_slots(p))            # [n_super]
+        idx = steps[:, None] + slots[None, :]                    # [S, n_super]
+        sup = jnp.arange(len(slots))[None, :]
+        pattern.append(jax.tree_util.tree_map(
+            lambda a: a[idx, sup], captured["pattern"][p]))
+    return {"prelude": prelude, "pattern": tuple(pattern)}
+
+
 def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
                  segments: jax.Array, apply_block: ApplyBlock,
-                 *, remat: bool = False, buf_spec=None, grouped_apply=None):
+                 *, remat: bool = False, buf_spec=None, grouped_apply=None,
+                 capture_states: bool = False):
     """segments: [S, B, T, D] -> (ys [S, B, T, D], final_state).
 
     Same params/state structure as run_sequential — the two executors are
@@ -54,6 +83,12 @@ def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
     built by ``models.grouped_blocks.make_grouped_apply`` that launches the
     Pallas grouped kernels (grouped GEMM / batched flash attention / fused
     ARMT memory) over the whole group (EXPERIMENTS.md §Perf).
+
+    capture_states: also return the per-step recurrent state (A/z/h/conv)
+    of every layer as a third output with leading axis [S+L-1] — the raw
+    material for segment-boundary snapshots (boundary_states_from_capture,
+    serve/state_store.py). Constant-size per step, so the extra scan output
+    is (S+L-1) x the recurrent-state footprint, not activations.
     """
     S = segments.shape[0]
     L = layout.n_layers
@@ -155,13 +190,18 @@ def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
         buf_next = _constrain(jnp.where(is0, jnp.zeros_like(buf_next),
                                         buf_next))
         new_states = {"prelude": tuple(new_prelude), "pattern": tuple(new_pattern)}
-        return (buf_next, new_states), out
+        emit = ((out, recurrent_state(new_states)) if capture_states
+                else out)
+        return (buf_next, new_states), emit
 
     step_fn = jax.checkpoint(diag_step) if remat else diag_step
 
     buf0 = _constrain(jnp.zeros((L,) + segments.shape[1:], segments.dtype))
     state0 = dict(state0,
                   pattern=_constrain_states(tuple(state0["pattern"])))
-    (_, final_state), ys = jax.lax.scan(
+    (_, final_state), emitted = jax.lax.scan(
         step_fn, (buf0, state0), (xs_seg, jnp.arange(n_steps)))
-    return ys[L - 1:], final_state
+    if capture_states:
+        ys, captured = emitted
+        return ys[L - 1:], final_state, captured
+    return emitted[L - 1:], final_state

@@ -27,6 +27,28 @@ from repro.configs import ARMTConfig
 
 EPS = 1e-6
 
+# The per-layer *recurrent* state leaves: ARMT associative memory (A, z) and
+# SSM carry (h, conv). This — plus an in-segment position — is everything a
+# segment-boundary snapshot needs: KV caches are segment-local (reset at every
+# flush) and so are empty at a boundary by construction. The serving state
+# store (serve/state_store.py) and the decode-state transplant both key off
+# this list, so it lives here next to the memory math.
+RECURRENT_KEYS = ("A", "z", "h", "conv")
+
+
+def recurrent_state(state: Dict) -> Dict:
+    """Project an executor/decode state tree onto its recurrent leaves.
+
+    state: {'prelude': tuple of per-layer dicts, 'pattern': tuple of stacked
+    dicts} (extra keys like 'pos' or caches are ignored). Returns the same
+    structure with only RECURRENT_KEYS kept per layer — the constant-size
+    summary of the whole prefix that makes segment-granular prefix caching
+    kilobytes instead of a KV-cache's gigabytes."""
+    def keep(d: Dict) -> Dict:
+        return {k: d[k] for k in RECURRENT_KEYS if k in d}
+    return {"prelude": tuple(keep(d) for d in state["prelude"]),
+            "pattern": tuple(keep(d) for d in state["pattern"])}
+
 
 def dpfp(x: jax.Array, nu: int = 3) -> jax.Array:
     """Deterministic Parameter-Free Projection (Schlag et al. 2021).

@@ -11,6 +11,7 @@ from typing import Any, Callable, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.core.memory import recurrent_state
 from repro.core.schedule import StackLayout
 
 # apply_block(btype, layer_params, x, layer_state) -> (y, new_layer_state)
@@ -19,12 +20,17 @@ ApplyBlock = Callable[[str, Any, jax.Array, Any], tuple]
 
 def run_sequential(layout: StackLayout, params: Dict, state0: Dict,
                    segments: jax.Array, apply_block: ApplyBlock,
-                   *, remat: bool = False):
+                   *, remat: bool = False, capture_states: bool = False):
     """segments: [S, B, T, D] -> (ys [S, B, T, D], final_state).
 
     params/state structure:
       {'prelude': tuple(len n_prelude) of per-layer pytrees,
        'pattern': tuple(len P) of pytrees stacked over n_super on axis 0}
+
+    capture_states: also return, as a third output, the recurrent state
+    (A/z/h/conv) after every segment with leading axis [S] — in the
+    sequential schedule each scan step's state *is* the segment-boundary
+    state, so unlike the diagonal executor no reindexing is needed.
     """
     P = len(layout.pattern)
 
@@ -50,7 +56,12 @@ def run_sequential(layout: StackLayout, params: Dict, state0: Dict,
                 scan_body, x, (params["pattern"], states["pattern"]))
         else:
             new_pattern = states["pattern"]
-        return {"prelude": tuple(new_prelude), "pattern": new_pattern}, x
+        new_states = {"prelude": tuple(new_prelude), "pattern": new_pattern}
+        emit = (x, recurrent_state(new_states)) if capture_states else x
+        return new_states, emit
 
-    final_state, ys = jax.lax.scan(seg_step, state0, segments)
-    return ys, final_state
+    final_state, emitted = jax.lax.scan(seg_step, state0, segments)
+    if capture_states:
+        ys, captured = emitted
+        return ys, final_state, captured
+    return emitted, final_state

@@ -2,11 +2,18 @@
 
 Two modes:
   * single (default): one fixed-shape batch, prefilled with diagonal
-    batching, decoded on-device against constant-size ARMT state.
+    batching, decoded on-device against constant-size ARMT state. With
+    ``--session-store`` it runs a two-turn session demo (turn 2 resumes
+    from the stored state instead of re-prefilling turn 1).
   * ``--continuous``: a stream of requests with heterogeneous prompt
     lengths through the continuous-batching scheduler
     (serve/scheduler.py) — tokens stream back per request as they are
-    produced.
+    produced. Scheduler rejections (queue-full, invalid request, evicted
+    session) arrive as structured ``RequestError`` events on the same
+    stream and are printed, never raised out of the iterator mid-serve.
+    With ``--prefix-cache`` the requests share a system prompt and
+    admission transplants the cached boundary snapshot (state store,
+    DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -32,6 +39,22 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="reject (structured queue_full event) beyond this "
+                         "many queued requests")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="segment-granular prefix cache: requests share a "
+                         "system prompt; admission transplants the cached "
+                         "boundary state instead of re-prefilling it")
+    ap.add_argument("--prefix-cache-mb", type=float, default=64.0,
+                    help="prefix-cache LRU byte budget")
+    ap.add_argument("--session-store", action="store_true",
+                    help="multi-turn session demo: turn 2 resumes from the "
+                         "stored end-of-turn-1 state")
+    ap.add_argument("--session-mb", type=float, default=128.0)
+    ap.add_argument("--store-dir", default=None,
+                    help="disk-spill directory for evicted store entries "
+                         "(checkpoint-manager named blobs)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -39,7 +62,8 @@ def main():
     import numpy as np
     from repro.configs import get_config, get_smoke_config
     from repro.models import init_params
-    from repro.serve import ServeEngine, Request
+    from repro.serve import (PrefixCache, Request, RequestError, ServeEngine,
+                             SessionStore)
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
@@ -48,10 +72,17 @@ def main():
                  "apply to single-batch mode only")
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     seg = cfg.armt.segment_len if cfg.armt else 64
+    prefix_cache = (PrefixCache(seg, max_bytes=int(args.prefix_cache_mb * 2**20),
+                                spill_dir=args.store_dir)
+                    if args.prefix_cache else None)
+    session_store = (SessionStore(max_bytes=int(args.session_mb * 2**20),
+                                  spill_dir=args.store_dir)
+                     if args.session_store else None)
     # headroom for the longer of the two continuous prompt buckets
     eng = ServeEngine(params, cfg, serve_mode=args.serve_mode,
                       schedule=args.schedule,
-                      max_len=args.prompt_len + seg // 2 + args.max_new)
+                      max_len=args.prompt_len + seg // 2 + args.max_new,
+                      prefix_cache=prefix_cache, session_store=session_store)
 
     if args.continuous:
         rng = np.random.default_rng(args.seed + 1)
@@ -60,37 +91,76 @@ def main():
         lens = [args.prompt_len if i % 2 == 0
                 else max(1, args.prompt_len + seg // 2)
                 for i in range(args.requests)]
-        reqs = [Request(req_id=f"r{i}",
-                        prompt=rng.integers(8, cfg.vocab, (L,)).astype("int32"),
-                        max_new=args.max_new)
+        if prefix_cache is not None:
+            # shared system prompt: every request begins with the same full
+            # segments, so admissions after the first hit the cache
+            n_sys = max(seg, (args.prompt_len // (2 * seg)) * seg)
+            sys_prompt = rng.integers(8, cfg.vocab, (n_sys,)).astype("int32")
+            reqs = [Request(
+                req_id=f"r{i}",
+                prompt=np.concatenate([
+                    sys_prompt,
+                    rng.integers(8, cfg.vocab,
+                                 (max(1, L - n_sys),)).astype("int32")]),
+                max_new=args.max_new)
                 for i, L in enumerate(lens)]
+        else:
+            reqs = [Request(req_id=f"r{i}",
+                            prompt=rng.integers(8, cfg.vocab,
+                                                (L,)).astype("int32"),
+                            max_new=args.max_new)
+                    for i, L in enumerate(lens)]
         t0 = time.perf_counter()
         n_tok = 0
-        firsts = {}
         outs = {r.req_id: [] for r in reqs}
-        for ev in eng.serve(reqs, n_slots=args.slots, chunk=args.chunk):
+        metrics = {}
+        for ev in eng.serve(reqs, n_slots=args.slots, chunk=args.chunk,
+                            max_queue=args.max_queue):
+            if isinstance(ev, RequestError):
+                print(f"{ev.req_id}: REJECTED [{ev.code}] {ev.message}")
+                continue
             n_tok += 1
             outs[ev.req_id].append(ev.token)
-            firsts.setdefault(ev.req_id, time.perf_counter() - t0)
             if ev.done:
+                metrics[ev.req_id] = (ev.ttft_s, ev.tok_s)
                 print(f"{ev.req_id}: done ({ev.index + 1} tokens, "
-                      f"ttft={firsts[ev.req_id]:.2f}s) "
+                      f"ttft={ev.ttft_s:.2f}s, {ev.tok_s:.1f} tok/s) "
                       f"first 8: {outs[ev.req_id][:8]}")
         dt = time.perf_counter() - t0
         print(f"arch={cfg.name} mode={args.serve_mode} slots={args.slots} "
               f"requests={args.requests}")
         print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+        if prefix_cache is not None:
+            st = prefix_cache.stats.as_dict()
+            print(f"prefix-cache: {st['hits']} hits / {st['misses']} misses, "
+                  f"{len(prefix_cache)} entries, "
+                  f"{st['bytes_in_ram'] / 2**10:.1f} KiB, "
+                  f"{st['evictions']} evictions ({st['spills']} spilled)")
         return
 
     prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
                                  (args.batch, args.prompt_len), 8, cfg.vocab)
+    if session_store is not None:
+        # two-turn session demo on row 0: turn 2 feeds only the new tokens
+        turn2 = jax.random.randint(jax.random.PRNGKey(args.seed + 2),
+                                   (1, max(8, seg // 2)), 8, cfg.vocab)
+        r1 = eng.generate(prompts[:1], args.max_new, session_id="demo")
+        r2 = eng.generate(turn2, args.max_new, session_id="demo")
+        print(f"arch={cfg.name} session demo: turn1 ttft={r1.ttft_s:.2f}s "
+              f"({prompts.shape[1]} prompt tokens), turn2 resumed="
+              f"{r2.resumed} ttft={r2.ttft_s:.2f}s "
+              f"({turn2.shape[1]} new tokens, history never recomputed)")
+        print("turn2 first 8:", r2.tokens[0, :8].tolist())
+        return
+
     t0 = time.perf_counter()
     res = eng.generate(prompts, args.max_new, temperature=args.temperature,
                        top_k=args.top_k, seed=args.seed)
     dt = time.perf_counter() - t0
     print(f"arch={cfg.name} mode={args.serve_mode} schedule={res.schedule} "
           f"prefill_segments={res.prefill_segments}")
-    print(f"generated {res.tokens.shape} tokens in {dt:.2f}s")
+    print(f"generated {res.tokens.shape} tokens in {dt:.2f}s "
+          f"(ttft={res.ttft_s:.2f}s, decode {res.tok_s:.1f} tok/s)")
     print("first row:", res.tokens[0].tolist())
 
 

@@ -1,4 +1,5 @@
 from repro.models.model import (init_params, param_specs, init_state,
                                 forward_hidden, lm_loss, last_logits,
+                                boundary_logits,
                                 decode_state_init, decode_step, flush_segment,
                                 mask_decode_state, encode)

@@ -22,7 +22,7 @@ from repro.configs import ArchConfig
 from repro.core.memory import mem_read, mem_update
 from repro.core.schedule import StackLayout
 from repro.core.sequential import run_sequential
-from repro.core.diagonal import run_diagonal
+from repro.core.diagonal import boundary_states_from_capture, run_diagonal
 from repro.models.attention import (attention, cross_kv, decode_attention,
                                     sdpa, causal_mask)
 from repro.models.blocks import (block_param_init, block_state_init,
@@ -100,6 +100,11 @@ def init_state(cfg: ArchConfig, batch: int, mode: str, dtype) -> Dict:
     return state
 
 
+# forward_hidden takes an `init_state` *argument* (resume from a carried
+# state) which shadows the function above inside its body — alias it.
+_init_exec_state = init_state
+
+
 # ---------------------------------------------------------------------------
 # Encoder (whisper) — frontend is a stub: callers pass frame *embeddings*
 # ---------------------------------------------------------------------------
@@ -169,9 +174,21 @@ def forward_hidden(params: Dict, cfg: ArchConfig, tokens: jax.Array, *,
                    enc_frames: Optional[jax.Array] = None,
                    ssm_method: str = "assoc",
                    slot_spec=None,
-                   grouped_impl: Optional[str] = None) -> Tuple[jax.Array, Dict]:
+                   grouped_impl: Optional[str] = None,
+                   init_state: Optional[Dict] = None,
+                   capture_states: bool = False):
     """Returns (hidden [S, B, T, D] — memory-token positions stripped,
-    final executor state).
+    final executor state); with capture_states=True a third output holds
+    the recurrent state at every segment boundary (leaves lead with [S];
+    boundary c at index c-1) — the capture path for the serving state
+    store (serve/state_store.py).
+
+    init_state: resume the executor from a carried state instead of zeros —
+    a prefix-cache snapshot or the final state of an earlier forward over a
+    prefix of the same stream. The recurrence is layer-local, so splitting
+    one long token stream into several forward_hidden calls with the state
+    threaded through is exact (per-(layer, segment) applications see
+    identical inputs in identical order).
 
     grouped_impl: 'vmap' | 'fused' override of cfg.grouped_impl — 'fused'
     routes the diagonal executor's per-step grouped launch through the
@@ -192,16 +209,20 @@ def forward_hidden(params: Dict, cfg: ArchConfig, tokens: jax.Array, *,
         # Paper Table 9: diagonal wins once the grid is deep in segments; fall
         # back to sequential when the diagonal would be mostly fill/drain.
         schedule = "diagonal" if x.shape[0] >= layout.n_layers else "sequential"
-    state0 = init_state(cfg, B, mode, dtype)
-    if cfg.encoder is not None:
-        assert enc_frames is not None, "whisper needs enc_frames (stub frontend)"
-        enc_out = encode(params, cfg, enc_frames)
-        state0 = _fill_cross_kv(params, cfg, state0, enc_out)
+    if init_state is not None:
+        state0 = init_state
+    else:
+        state0 = _init_exec_state(cfg, B, mode, dtype)
+        if cfg.encoder is not None:
+            assert enc_frames is not None, \
+                "whisper needs enc_frames (stub frontend)"
+            enc_out = encode(params, cfg, enc_frames)
+            state0 = _fill_cross_kv(params, cfg, state0, enc_out)
 
     block_mode = mode if mode == "full" else "segmented"
     apply = make_apply_block(cfg, mode=block_mode, ssm_method=ssm_method)
     exec_params = {"prelude": params["prelude"], "pattern": params["pattern"]}
-    kw = {"remat": cfg.remat != "none"}
+    kw = {"remat": cfg.remat != "none", "capture_states": capture_states}
     if schedule == "diagonal":
         run = run_diagonal
         kw["buf_spec"] = slot_spec
@@ -213,6 +234,13 @@ def forward_hidden(params: Dict, cfg: ArchConfig, tokens: jax.Array, *,
                 cfg, mode=block_mode, ssm_method=ssm_method)
     else:
         run = run_sequential
+    if capture_states:
+        ys, fin, captured = run(layout, exec_params, state0, x, apply, **kw)
+        if schedule == "diagonal":
+            captured = boundary_states_from_capture(layout, captured,
+                                                    x.shape[0])
+        hidden = ys[:, :, :seg_len] if with_mem else ys
+        return hidden, fin, captured
     ys, fin = run(layout, exec_params, state0, x, apply, **kw)
     hidden = ys[:, :, :seg_len] if with_mem else ys
     return hidden, fin
@@ -274,6 +302,15 @@ def lm_loss(params: Dict, cfg: ArchConfig, tokens: jax.Array,
 def last_logits(params: Dict, cfg: ArchConfig, hidden: jax.Array) -> jax.Array:
     """Logits of the final position of the final segment. hidden: [S,B,T,D]."""
     h = norm(cfg.norm, hidden[-1, :, -1], params["final_norm"])
+    return _head_matmul(params, cfg, h).astype(jnp.float32)
+
+
+def boundary_logits(params: Dict, cfg: ArchConfig,
+                    hidden: jax.Array) -> jax.Array:
+    """Logits of the last real-token position of *every* segment:
+    hidden [S, B, T, D] -> [S, B, V] fp32. Stored alongside segment-boundary
+    snapshots so an exact full-prefix cache hit needs no forward at all."""
+    h = norm(cfg.norm, hidden[:, :, -1], params["final_norm"])
     return _head_matmul(params, cfg, h).astype(jnp.float32)
 
 

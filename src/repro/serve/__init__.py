@@ -1,2 +1,6 @@
 from repro.serve.engine import ServeEngine, GenerationResult
-from repro.serve.scheduler import (ContinuousScheduler, Request, StreamEvent)
+from repro.serve.scheduler import (ContinuousScheduler, Request, RequestError,
+                                   StreamEvent)
+from repro.serve.state_store import (PrefixCache, SegmentSnapshot,
+                                     SessionEntry, SessionEvicted,
+                                     SessionStore, prefix_hash_chain)

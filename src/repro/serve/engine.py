@@ -12,29 +12,46 @@ greedy/temperature/top-k sampling applied to the logits on device — the
 host sees tokens once per `generate` call (zero per-token device->host
 transfers), not once per token.
 
+Prompt shapes are *bucketed* (on by default): full segments run in
+descending power-of-two groups with the executor state threaded through,
+and sub-segment tails feed `decode_step` in descending power-of-two
+chunks — so the engine compiles O(log) distinct prefill shapes instead of
+one per prompt length the scheduler ever sees. Bucketing is pure
+re-chunking of the exact same tokens (never padding), so it is
+token-identical to the unbucketed path by construction (tested).
+
+The engine optionally carries a serving state store (serve/state_store.py):
+a segment-granular `PrefixCache` (longest-prefix match at admission, so
+only uncached tail segments are prefilled) and a `SessionStore` (multi-turn
+resume via `generate(..., session_id=...)` — O(new turn) instead of
+re-prefilling the conversation).
+
 Multi-request continuous batching lives in `serve/scheduler.py`; the
 `ServeEngine.serve(requests)` iterator is the streaming front door.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
-from typing import Dict, Iterable, Iterator, Optional
+from typing import Dict, Iterable, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
-from repro.models import (decode_state_init, decode_step, flush_segment,
-                          forward_hidden, last_logits)
+from repro.core.memory import RECURRENT_KEYS
+from repro.models import (boundary_logits, decode_state_init, decode_step,
+                          flush_segment, forward_hidden, last_logits)
 
 
 def _transplant(fin: Dict, dstate: Dict) -> Dict:
-    """Copy recurrent state (A/z/h/conv) from executor final state into the
-    decode state (which additionally holds kv caches and pos)."""
+    """Copy recurrent state (RECURRENT_KEYS: A/z/h/conv) from an executor
+    final state or boundary snapshot into the decode state (which
+    additionally holds kv caches and pos)."""
     def merge_one(src: Dict, dst: Dict) -> Dict:
         out = dict(dst)
-        for k in ("A", "z", "h", "conv"):
+        for k in RECURRENT_KEYS:
             if k in src:
                 out[k] = src[k].astype(dst[k].dtype) if hasattr(dst.get(k), "dtype") else src[k]
         return out
@@ -47,11 +64,29 @@ def _transplant(fin: Dict, dstate: Dict) -> Dict:
             "pos": dstate["pos"]}
 
 
+def _pow2_chunks(n: int) -> List[int]:
+    """Descending power-of-two decomposition of n (13 -> [8, 4, 1]) — the
+    length buckets that keep prefill compile counts logarithmic."""
+    out = []
+    while n > 0:
+        p = 1 << (n.bit_length() - 1)
+        out.append(p)
+        n -= p
+    return out
+
+
 @dataclass
 class GenerationResult:
     tokens: np.ndarray          # [B, max_new]
     prefill_segments: int
     schedule: str
+    # serving metrics (host-clock; decode is one device call, so TTFT is the
+    # prefill/admission wall time — the quantity prefix caching attacks)
+    ttft_s: float = 0.0
+    tok_s: float = 0.0          # decode throughput after first token
+    cached_segments: int = 0    # segments transplanted from the prefix cache
+    session_id: Optional[str] = None
+    resumed: bool = False       # True when restored from the session store
 
 
 class ServeEngine:
@@ -59,11 +94,18 @@ class ServeEngine:
 
     serve_mode 'armt': constant-memory decode (paper Fig. 1); 'cache':
     standard full-KV decoding for the baseline comparison.
+
+    prefix_cache / session_store: optional serving state stores
+    (serve/state_store.py). The prefix cache needs serve_mode='armt' (its
+    snapshots are the constant-size recurrent memory; a 'cache'-mode prefix
+    would be the full KV tensor — exactly what the RMT lets us avoid).
     """
 
     def __init__(self, params, cfg: ArchConfig, *, serve_mode: str = "armt",
                  schedule: str = "diagonal", max_len: int = 8192,
-                 grouped_impl: Optional[str] = None):
+                 grouped_impl: Optional[str] = None,
+                 prefix_cache=None, session_store=None,
+                 bucket_prompts: bool = True):
         if serve_mode not in ("armt", "cache"):
             raise ValueError(f"unknown serve_mode {serve_mode!r}")
         if serve_mode == "armt" and cfg.armt is None and not cfg.is_recurrent:
@@ -87,6 +129,20 @@ class ServeEngine:
         # arbitrary chunk sizes, so 'one chunk' (max_len) replaces the old
         # silent seg_len=1024 fallback
         self.seg_len = cfg.armt.segment_len if cfg.armt else max_len
+        if prefix_cache is not None:
+            if serve_mode != "armt":
+                raise ValueError(
+                    "prefix_cache needs serve_mode='armt' — its snapshots "
+                    "are the constant-size recurrent memory at segment "
+                    "boundaries, which full-KV 'cache' mode does not have")
+            if prefix_cache.seg_len != self.seg_len:
+                raise ValueError(
+                    f"prefix_cache.seg_len {prefix_cache.seg_len} != engine "
+                    f"segment length {self.seg_len}: boundary hashes would "
+                    "never match this engine's prefill boundaries")
+        self.prefix_cache = prefix_cache
+        self.session_store = session_store
+        self.bucket_prompts = bucket_prompts
         self._step = jax.jit(
             lambda p, s, t: decode_step(p, cfg, s, t, serve_mode=serve_mode))
         self._flush = jax.jit(
@@ -97,28 +153,77 @@ class ServeEngine:
 
     def prefill(self, prompts: jax.Array, enc_frames=None):
         """prompts: [B, P]. Returns (next_token_logits, decode_state)."""
-        logits, dstate, _ = self._prefill(prompts, enc_frames=enc_frames)
+        logits, dstate, _, _ = self._prefill(prompts, enc_frames=enc_frames)
         return logits, dstate
 
+    # ------------------------------------------------------------------
+    # Prefill: diagonal full segments (+ prefix cache) then bucketed tail
+    # ------------------------------------------------------------------
+
+    def _forward(self, toks, exec_state, enc_frames, capture: bool):
+        return forward_hidden(
+            self.params, self.cfg, toks, schedule=self.schedule,
+            enc_frames=enc_frames, grouped_impl=self.grouped_impl,
+            init_state=exec_state, capture_states=capture)
+
     def _prefill(self, prompts: jax.Array, enc_frames=None):
+        """prompts: [B, P]. Returns (next_token_logits, decode_state,
+        in-segment pos, cached_segments)."""
         B, P = prompts.shape
         dtype = self.params["embed"].dtype
         dstate = decode_state_init(self.cfg, B, serve_mode=self.serve_mode,
                                    max_len=self.max_len, dtype=dtype)
         n_full = P // self.seg_len if self.serve_mode == "armt" else 0
         logits = None
-        if n_full > 0:
-            hidden, fin = forward_hidden(
-                self.params, self.cfg, prompts[:, :n_full * self.seg_len],
-                schedule=self.schedule, enc_frames=enc_frames,
-                grouped_impl=self.grouped_impl)
+        cached = 0
+        exec_state = None
+        prompt_np = None
+        # prefix caching is per-request (B=1 — the scheduler's admission
+        # shape) and needs token-addressable segments, which encoder archs'
+        # frame inputs are not
+        use_cache = (self.prefix_cache is not None and B == 1
+                     and enc_frames is None and n_full > 0)
+        chain = None
+        if use_cache:
+            from repro.serve.state_store import prefix_hash_chain
+            prompt_np = np.asarray(prompts[0], np.int32)
+            chain = prefix_hash_chain(prompt_np, self.seg_len)
+            cached, snap = self.prefix_cache.match(prompt_np, chain=chain)
+            if cached:
+                exec_state = _snapshot_exec_state(snap.state)
+                dstate = _transplant(exec_state, dstate)
+                logits = jnp.asarray(snap.logits)
+        rem = n_full - cached
+        if rem > 0:
+            groups = _pow2_chunks(rem) if self.bucket_prompts else [rem]
+            off = cached
+            fin = None
+            for g in groups:
+                toks_g = prompts[:, off * self.seg_len:(off + g) * self.seg_len]
+                if use_cache:
+                    hidden, fin, bstates = self._forward(
+                        toks_g, exec_state, enc_frames, capture=True)
+                    blogits = boundary_logits(self.params, self.cfg, hidden)
+                    for c in range(g):
+                        end = (off + c + 1) * self.seg_len
+                        self.prefix_cache.insert(
+                            prompt_np[:end],
+                            jax.tree_util.tree_map(lambda a, _c=c: a[_c],
+                                                   bstates),
+                            blogits[c], key=chain[off + c])
+                else:
+                    hidden, fin = self._forward(toks_g, exec_state,
+                                                enc_frames, capture=False)
+                logits = last_logits(self.params, self.cfg, hidden)
+                exec_state = fin
+                off += g
             dstate = _transplant(fin, dstate)
-            logits = last_logits(self.params, self.cfg, hidden)
         tail = prompts[:, n_full * self.seg_len:]
         pos = 0                       # host-side segment position (no sync)
         if tail.shape[1] > 0:
             logits, dstate, pos = self._chunk(dstate, tail, pos)
-        return logits, dstate, pos
+        assert logits is not None, "empty prompt"
+        return logits, dstate, pos, cached
 
     def _maybe_flush(self, dstate, pos: int):
         """ARMT segment boundary: flush memory and reset the segment cache.
@@ -131,7 +236,9 @@ class ServeEngine:
         return dstate, pos
 
     def _chunk(self, dstate, toks, pos: int):
-        """Feed a multi-token chunk, flushing at ARMT segment boundaries."""
+        """Feed a multi-token chunk, flushing at ARMT segment boundaries.
+        With bucket_prompts, each piece is the largest power of two that
+        fits before the next boundary — O(log seg_len) compiled shapes."""
         logits = None
         t = 0
         T = toks.shape[1]
@@ -139,6 +246,8 @@ class ServeEngine:
             room = (self.seg_len - pos
                     if self.serve_mode == "armt" else T - t)
             take = min(room, T - t)
+            if self.bucket_prompts:
+                take = 1 << (take.bit_length() - 1)
             logits, dstate = self._step(self.params, dstate,
                                         toks[:, t:t + take])
             t += take
@@ -155,7 +264,11 @@ class ServeEngine:
         steps that samples, steps, and flushes at segment boundaries via
         lax.cond — no host branching, no per-token device->host transfer.
         The decode state is donated to the loop (freely overwritten in
-        place on backends that support donation)."""
+        place on backends that support donation) and the final carry comes
+        back out, so a session store can persist it without re-running
+        anything. Note the last sampled token is never fed through the
+        model — the returned state has consumed max_new - 1 of the emitted
+        tokens; the last one is the session's `pending` token."""
         key_ = (max_new, greedy, top_k)
         if key_ in self._loops:
             return self._loops[key_]
@@ -192,8 +305,9 @@ class ServeEngine:
             # fed through a wasted forward
             keys = jax.random.split(rng, max_new)
             tok0 = sample(logits0, keys[0])
-            (_, _), toks = jax.lax.scan(body, (dstate, tok0), keys[1:])
-            return jnp.concatenate([tok0[None], toks], axis=0).T  # [B, max_new]
+            (fstate, _), toks = jax.lax.scan(body, (dstate, tok0), keys[1:])
+            toks = jnp.concatenate([tok0[None], toks], axis=0).T  # [B, max_new]
+            return toks, fstate
 
         # donation is a no-op (with a warning) on CPU — only request it where
         # the backend honors it
@@ -203,35 +317,98 @@ class ServeEngine:
 
     def generate(self, prompts: jax.Array, max_new: int, *,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 enc_frames=None) -> GenerationResult:
+                 enc_frames=None,
+                 session_id: Optional[str] = None) -> GenerationResult:
         """Prefill + decode max_new tokens. temperature<=0: greedy (the
         default, deterministic); otherwise temperature/top-k sampling with
-        an on-device PRNG. One device->host transfer for the whole call."""
-        if (self.serve_mode == "cache"
-                and prompts.shape[1] + max_new > self.max_len):
-            # the KV write offset would clamp at the cache end and silently
-            # corrupt logits — refuse instead
-            raise ValueError(
-                f"prompt_len {prompts.shape[1]} + max_new {max_new} exceeds "
-                f"max_len {self.max_len} of the KV cache")
-        logits, dstate, _pos = self._prefill(prompts, enc_frames=enc_frames)
+        an on-device PRNG. One device->host transfer for the whole call.
+
+        session_id: persist the end-of-generation state in the engine's
+        session store and, when a state for this id already exists, resume
+        from it — the prompt is then *this turn's new tokens only* and the
+        conversation history is never recomputed."""
+        B, P = prompts.shape
+        entry = None
+        if session_id is not None:
+            if self.session_store is None:
+                raise ValueError("session_id given but the engine has no "
+                                 "session_store")
+            if B != 1:
+                raise ValueError("sessions are per-conversation: B must be 1")
+            entry = self.session_store.get(session_id)   # None on first turn
+        if self.serve_mode == "cache":
+            base = (entry.pos + len(entry.pending)) if entry is not None else 0
+            if base + P + max_new > self.max_len:
+                # the KV write offset would clamp at the cache end and
+                # silently corrupt logits — refuse instead
+                raise ValueError(
+                    f"prompt_len {P} + max_new {max_new} (+{base} session "
+                    f"tokens) exceeds max_len {self.max_len} of the KV cache")
+        t0 = time.perf_counter()
+        cached = 0
+        if entry is not None:
+            dstate = {"prelude": entry.state["prelude"],
+                      "pattern": entry.state["pattern"],
+                      "pos": jnp.asarray(entry.pos, jnp.int32)}
+            toks_in = np.concatenate(
+                [entry.pending, np.asarray(prompts[0], np.int32)])
+            logits, dstate, _pos = self._chunk(
+                dstate, jnp.asarray(toks_in[None]), entry.pos)
+        else:
+            logits, dstate, _pos, cached = self._prefill(
+                prompts, enc_frames=enc_frames)
+        jax.block_until_ready(logits)
+        t_first = time.perf_counter()
         loop = self._decode_loop(max_new, temperature <= 0.0, top_k)
-        toks = loop(self.params, dstate, logits,
-                    jnp.float32(max(temperature, 1e-6)),
-                    jax.random.PRNGKey(seed))
-        return GenerationResult(np.asarray(toks),
-                                prompts.shape[1] // self.seg_len,
-                                self.schedule)
+        toks, fstate = loop(self.params, dstate, logits,
+                            jnp.float32(max(temperature, 1e-6)),
+                            jax.random.PRNGKey(seed))
+        toks = np.asarray(toks)
+        t_end = time.perf_counter()
+        if session_id is not None:
+            # the loop never feeds the last sampled token — it becomes the
+            # resume's `pending` prefix (see _decode_loop)
+            history = np.concatenate([
+                entry.tokens if entry is not None else np.empty(0, np.int32),
+                np.asarray(prompts[0], np.int32), toks[0]]).astype(np.int32)
+            self.session_store.put(
+                session_id,
+                state={"prelude": fstate["prelude"],
+                       "pattern": fstate["pattern"]},
+                pos=int(np.asarray(fstate["pos"]).reshape(-1)[0]),
+                pending=toks[0, -1:], tokens=history)
+        return GenerationResult(
+            toks, P // self.seg_len, self.schedule,
+            ttft_s=t_first - t0,
+            tok_s=max_new / max(t_end - t_first, 1e-9),
+            cached_segments=cached, session_id=session_id,
+            resumed=entry is not None)
 
     # ------------------------------------------------------------------
     # Continuous batching
     # ------------------------------------------------------------------
 
     def serve(self, requests: Iterable, *, n_slots: int = 4,
-              chunk: int = 8) -> Iterator:
+              chunk: int = 8, max_queue: Optional[int] = None) -> Iterator:
         """Continuous-batching streaming front door: admit `Request`s into a
         fixed pool of decode slots and yield `StreamEvent`s as tokens are
-        produced (see serve/scheduler.py for the slot-state invariants)."""
+        produced. Rejections (queue-full, invalid request, evicted session)
+        come back as structured `RequestError` events on the same stream —
+        the iterator never raises mid-serve for a bad request (see
+        serve/scheduler.py for the slot-state invariants)."""
         from repro.serve.scheduler import ContinuousScheduler
-        sched = ContinuousScheduler(self, n_slots=n_slots, chunk=chunk)
+        sched = ContinuousScheduler(self, n_slots=n_slots, chunk=chunk,
+                                    max_queue=max_queue)
         return sched.run(requests)
+
+
+def _snapshot_exec_state(state: Dict) -> Dict:
+    """Snapshot leaves may have crossed to host (numpy) via a store spill —
+    rebuild jnp leaves so the executor/jit sees uniform device arrays. The
+    copy is load-bearing: on an exact full-prefix hit with no tail the
+    transplanted leaves reach the decode loop *unmodified*, and that loop
+    donates its state — without a fresh buffer, donation would delete the
+    cache entry's arrays out from under the store and the next hit on the
+    same prefix would transplant deleted arrays (GPU/TPU only; donation is
+    skipped on CPU, so CPU tests can't catch it)."""
+    return jax.tree_util.tree_map(lambda a: jnp.array(a, copy=True), state)

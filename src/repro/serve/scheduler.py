@@ -18,15 +18,25 @@ Admission runs the diagonal prefill (ServeEngine._prefill, including the
 fused grouped path when the engine was built with grouped_impl='fused') on
 the new request alone, then transplants the resulting B=1 decode state into
 a free slot of the pool with ``.at[slot].set`` — other slots keep decoding
-across admissions (their rows are untouched).
+across admissions (their rows are untouched). With a prefix cache on the
+engine, admission prefills only the uncached tail segments; with a session
+store, a request carrying a known ``session_id`` transplants the stored
+conversation state and feeds only the new turn (O(new turn) admission).
+
+Rejections are *structured*: invalid requests, a full queue, and evicted
+sessions yield ``RequestError`` events on the stream — ``run`` never raises
+mid-serve for a bad request, so one malformed request cannot kill the other
+slots' in-flight generations.
 
 Slot-state invariants (DESIGN.md §8):
   * a slot row is meaningful iff its host-side `_Slot.active` is True; an
     inactive slot's row is garbage and is fully overwritten at admission
     (every leaf row, pos, and pending token) — nothing is read from it;
   * inactive slots still flow through the packed step (fixed shapes), but
-    their `pos` is frozen and the flush mask excludes them, so they never
-    flush and their garbage never influences an active row;
+    every leaf of their state is frozen by a ``jnp.where`` row-merge
+    (mask_decode_state) and the flush mask excludes them — so a finished
+    request's row is bit-exactly its end-of-generation state at the chunk
+    boundary, which is what the session store persists (§9);
   * per-slot independence of the math itself: all decode ops are
     batch-row-local. The one exception is MoE with `dispatch='global'` and
     a tight capacity factor (capacity drops depend on co-batched rows) —
@@ -37,6 +47,7 @@ Slot-state invariants (DESIGN.md §8):
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Iterable, Iterator, List, Optional, Union
@@ -45,15 +56,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, flush_segment
+from repro.models import decode_step, flush_segment, mask_decode_state
 
 
 @dataclass
 class Request:
-    """One generation request. prompt: int32 [P] token ids (P >= 1)."""
+    """One generation request. prompt: int32 [P] token ids (P >= 1).
+
+    session_id: resume/persist the conversation in the engine's session
+    store — the prompt is then this turn's new tokens only."""
     req_id: Union[int, str]
     prompt: np.ndarray
     max_new: int
+    session_id: Optional[str] = None
 
 
 @dataclass
@@ -63,6 +78,24 @@ class StreamEvent:
     token: int
     index: int                  # 0-based position within the request's output
     done: bool                  # True on the request's final token
+    # host-clock serving metrics, chunk-granular by design: set on the
+    # request's first event (ttft_s) and final event (ttft_s + tok_s).
+    # ttft_s counts from submission (queue wait included — that's the
+    # latency a caller feels); tok_s counts from *admission* (queue wait
+    # excluded, prefill included), so it measures this request's service
+    # rate, not the queue depth. GenerationResult.tok_s is decode-only.
+    ttft_s: Optional[float] = None
+    tok_s: Optional[float] = None
+
+
+@dataclass
+class RequestError:
+    """Structured rejection streamed in-band instead of raising out of the
+    serve iterator mid-flight. code: 'invalid_request' | 'queue_full' |
+    'session_evicted'."""
+    req_id: Union[int, str]
+    code: str
+    message: str
 
 
 @dataclass
@@ -72,17 +105,25 @@ class _Slot:
     index: int = 0
     active: bool = False
     tokens: List[int] = field(default_factory=list)
+    session_id: Optional[str] = None
+    prompt: Optional[np.ndarray] = None
+    history: Optional[np.ndarray] = None    # prior session turns (consumed)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: Optional[float] = None
 
 
 class ContinuousScheduler:
     """Drives a ServeEngine over many requests with continuous batching."""
 
-    def __init__(self, engine, *, n_slots: int = 4, chunk: int = 8):
+    def __init__(self, engine, *, n_slots: int = 4, chunk: int = 8,
+                 max_queue: Optional[int] = None):
         from repro.models import decode_state_init
         assert n_slots >= 1 and chunk >= 1
         self.engine = engine
         self.n_slots = n_slots
         self.chunk = chunk
+        self.max_queue = max_queue
         cfg = engine.cfg
         dtype = engine.params["embed"].dtype
         self.pool = decode_state_init(
@@ -93,28 +134,70 @@ class ContinuousScheduler:
         self.remaining = jnp.zeros((n_slots,), jnp.int32)
         self.slots = [_Slot() for _ in range(n_slots)]
         self.free: deque = deque(range(n_slots))
-        # the jitted step/admit functions are cached on the engine (keyed by
-        # chunk) so repeated serve() calls — and schedulers with different
-        # slot counts, which only differ in traced shapes — reuse compiles
-        self._chunk_fn, self._admit_fn = scheduler_fns(engine, chunk)
+        # the jitted step/admit/extract functions are cached on the engine
+        # (keyed by chunk) so repeated serve() calls — and schedulers with
+        # different slot counts, which only differ in traced shapes — reuse
+        # compiles
+        self._chunk_fn, self._admit_fn, self._extract_fn = \
+            scheduler_fns(engine, chunk)
 
     # ------------------------------------------------------------------
     # Host-side driver
     # ------------------------------------------------------------------
 
-    def _admit(self, req: Request) -> None:
-        assert req.max_new >= 1, f"{req.req_id}: max_new must be >= 1"
-        prompt = np.asarray(req.prompt, np.int32)
-        assert prompt.ndim == 1 and prompt.shape[0] >= 1, req.req_id
+    def _validate(self, req: Request) -> Optional[RequestError]:
+        prompt = np.asarray(req.prompt)
+        if req.max_new < 1:
+            return RequestError(req.req_id, "invalid_request",
+                                f"max_new must be >= 1, got {req.max_new}")
+        if prompt.ndim != 1 or prompt.shape[0] < 1:
+            return RequestError(req.req_id, "invalid_request",
+                                f"prompt must be a [P>=1] id vector, got "
+                                f"shape {prompt.shape}")
         if (self.engine.serve_mode == "cache"
                 and prompt.shape[0] + req.max_new > self.engine.max_len):
-            raise ValueError(
-                f"{req.req_id}: prompt+max_new exceeds max_len "
-                f"{self.engine.max_len} of the KV cache")
+            return RequestError(
+                req.req_id, "invalid_request",
+                f"prompt+max_new exceeds max_len {self.engine.max_len} of "
+                "the KV cache")
+        if (req.session_id is not None
+                and self.engine.session_store is None):
+            return RequestError(req.req_id, "invalid_request",
+                                "request carries a session_id but the "
+                                "engine has no session_store")
+        return None
+
+    def _admit(self, req: Request, t_submit: float) -> Optional[RequestError]:
+        """Prefill (or session-resume) the request alone and transplant it
+        into a free slot; other slots keep decoding across this call.
+        Returns a RequestError instead of admitting when rejected."""
+        err = self._validate(req)
+        if err is not None:
+            return err
+        t_admit = time.perf_counter()
+        prompt = np.asarray(req.prompt, np.int32)
+        entry = None
+        if req.session_id is not None:
+            from repro.serve.state_store import SessionEvicted
+            try:
+                entry = self.engine.session_store.get(req.session_id)
+            except SessionEvicted as e:
+                return RequestError(req.req_id, "session_evicted", str(e))
         slot = self.free.popleft()
-        # diagonal prefill of the new request alone; other slots' rows are
-        # untouched and keep decoding across this call
-        logits, one_state, pos = self.engine._prefill(prompt[None])
+        if entry is not None:
+            # O(new turn) resume: transplant the stored conversation state
+            # and feed only pending + this turn's tokens
+            dstate = {"prelude": entry.state["prelude"],
+                      "pattern": entry.state["pattern"],
+                      "pos": jnp.asarray(entry.pos, jnp.int32)}
+            toks_in = np.concatenate([entry.pending, prompt])
+            logits, one_state, pos = self.engine._chunk(
+                dstate, jnp.asarray(toks_in[None]), entry.pos)
+        else:
+            # diagonal prefill of the new request alone (longest-prefix
+            # cache hit inside _prefill when the engine carries one)
+            logits, one_state, pos, _cached = self.engine._prefill(
+                prompt[None])
         first_tok = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
         self.pool, self.tok, self.active, self.remaining = self._admit_fn(
             self.pool, self.tok, self.active, self.remaining,
@@ -123,14 +206,54 @@ class ContinuousScheduler:
         s = self.slots[slot]
         s.req_id, s.remaining, s.index, s.active, s.tokens = (
             req.req_id, req.max_new, 0, True, [])
+        s.session_id, s.prompt = req.session_id, prompt
+        s.history = (entry.tokens if entry is not None
+                     else np.empty(0, np.int32))
+        s.t_submit, s.t_admit, s.t_first = t_submit, t_admit, None
+        return None
 
-    def run(self, requests: Iterable[Request]) -> Iterator[StreamEvent]:
+    def _persist_session(self, b: int) -> None:
+        """End of generation for slot b: lift its row out of the pool
+        (device-side gather at the chunk boundary — the packed chunk froze
+        the row bit-exactly at its end-of-generation state) and persist it.
+        The scheduler's step consumes every emitted token (unlike
+        generate's loop), so nothing is pending on resume."""
+        s = self.slots[b]
+        row, pos, _pend = self._extract_fn(self.pool, self.tok, jnp.int32(b))
+        history = np.concatenate(
+            [s.history, s.prompt,
+             np.asarray(s.tokens, np.int32)]).astype(np.int32)
+        self.engine.session_store.put(
+            s.session_id, state=row, pos=int(np.asarray(pos)),
+            pending=np.empty(0, np.int32), tokens=history)
+
+    def run(self, requests: Iterable[Request]) -> Iterator[
+            Union[StreamEvent, RequestError]]:
         """Generator: admits requests as slots free up and yields one
-        StreamEvent per generated token (chunk-granular latency)."""
-        queue = deque(requests)
+        StreamEvent per generated token (chunk-granular latency), plus
+        RequestError events for rejected requests."""
+        t0 = time.perf_counter()
+        queue: deque = deque()
+        for req in requests:
+            # free slots count as capacity: admit straight through before
+            # queueing, so queue_full only fires under real backpressure
+            # (all slots busy AND the backlog at its limit)
+            if self.free and not queue:
+                err = self._admit(req, t_submit=t0)
+                if err is not None:
+                    yield err
+            elif self.max_queue is None or len(queue) < self.max_queue:
+                queue.append(req)
+            else:
+                yield RequestError(
+                    req.req_id, "queue_full",
+                    f"all {self.n_slots} slots busy and queue limit "
+                    f"{self.max_queue} reached")
         while True:
             while self.free and queue:
-                self._admit(queue.popleft())
+                err = self._admit(queue.popleft(), t_submit=t0)
+                if err is not None:
+                    yield err
             if not any(s.active for s in self.slots):
                 if not queue:
                     return
@@ -142,6 +265,7 @@ class ContinuousScheduler:
             # the single device->host transfer for these `chunk` tokens
             toks_np = np.asarray(toks)
             masks_np = np.asarray(masks)
+            now = time.perf_counter()
             for t in range(self.chunk):
                 for b, s in enumerate(self.slots):
                     if not masks_np[t, b] or not s.active:
@@ -150,17 +274,31 @@ class ContinuousScheduler:
                     done = s.remaining == 0
                     tok = int(toks_np[t, b])
                     s.tokens.append(tok)
-                    yield StreamEvent(s.req_id, tok, s.index, done)
+                    first = s.t_first is None
+                    if first:
+                        s.t_first = now
+                    ev = StreamEvent(s.req_id, tok, s.index, done)
+                    if first:
+                        ev.ttft_s = now - s.t_submit
+                    if done:
+                        ev.ttft_s = s.t_first - s.t_submit
+                        ev.tok_s = (s.index + 1) / max(now - s.t_admit,
+                                                       1e-9)
+                    yield ev
                     s.index += 1
                     if done:
                         s.active = False
+                        if (s.session_id is not None
+                                and self.engine.session_store is not None):
+                            self._persist_session(b)
                         self.free.append(b)
 
 
 
 def scheduler_fns(engine, chunk: int):
-    """Build (or fetch from the engine's cache) the jitted packed-chunk and
-    admission functions shared by every scheduler on this engine."""
+    """Build (or fetch from the engine's cache) the jitted packed-chunk,
+    admission, and slot-extraction functions shared by every scheduler on
+    this engine."""
     cache = engine._sched_fns
     if chunk in cache:
         return cache[chunk]
@@ -176,11 +314,13 @@ def scheduler_fns(engine, chunk: int):
             emit, emit_mask = tok, active
             logits, new_state = decode_step(params, cfg, state, tok,
                                             serve_mode=serve_mode)
-            # freeze inactive slots' positions: they never hit a segment
-            # boundary, so garbage rows never trigger (or mask into) a
-            # flush, and their cache writes stay at one frozen offset
-            new_state["pos"] = jnp.where(active, new_state["pos"],
-                                         state["pos"])
+            # freeze EVERY leaf of inactive slots' rows, not just pos:
+            # garbage rows never trigger (or mask into) a flush, their SSM
+            # carries and cache offsets stop drifting, and — load-bearing
+            # for the session store — a row that finished mid-chunk stays
+            # bit-exactly at its end-of-generation state until the host
+            # extracts it at the chunk boundary
+            new_state = mask_decode_state(active, new_state, state)
             if armt_on:
                 boundary = active & (new_state["pos"] >= seg_len)
                 new_state = jax.lax.cond(
@@ -213,7 +353,20 @@ def scheduler_fns(engine, chunk: int):
                 active.at[slot].set(True),
                 remaining.at[slot].set(n_new))
 
+    def extract_fn(pool, tok, slot):
+        """Inverse of admit_fn's transplant: lift slot row -> B=1 state
+        (device-side; the host only pulls it when persisting a session)."""
+        prelude = jax.tree_util.tree_map(
+            lambda pl: jax.lax.dynamic_slice_in_dim(pl, slot, 1, axis=0),
+            tuple(pool["prelude"]))
+        pattern = jax.tree_util.tree_map(
+            lambda pl: jax.lax.dynamic_slice_in_dim(pl, slot, 1, axis=1),
+            tuple(pool["pattern"]))
+        return ({"prelude": prelude, "pattern": pattern},
+                pool["pos"][slot], tok[slot])
+
     fns = (jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4) if donate_ok else ()),
-           jax.jit(admit_fn, donate_argnums=(0, 1, 2, 3) if donate_ok else ()))
+           jax.jit(admit_fn, donate_argnums=(0, 1, 2, 3) if donate_ok else ()),
+           jax.jit(extract_fn))
     cache[chunk] = fns
     return fns

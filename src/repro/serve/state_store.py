@@ -1,0 +1,367 @@
+"""Memory-state store: segment-granular prefix caching + session resume.
+
+In an RMT the recurrent memory at a segment boundary — per-layer (A, z)
+associative matrices and SSM (h, conv) carries — is a *constant-size*
+summary of the entire prefix (PAPER.md; Bulatov et al. 2022). That makes
+prefix caching possible at segment granularity by snapshotting kilobytes of
+state per cached prefix, where a KV-cache prefix store needs gigabytes, and
+it sidesteps the state-recomputation cost other recurrent long-context
+models pay on every turn.
+
+Three pieces (DESIGN.md §9):
+
+* ``SegmentSnapshot`` — the captured boundary state: the recurrent leaves
+  (core.memory.RECURRENT_KEYS), the exact token-id prefix it summarizes,
+  and the boundary's last-position logits (so an exact full-prefix hit
+  needs no forward at all). At a boundary the in-segment position is 0 and
+  the segment KV cache is empty by construction, so neither is stored.
+
+* ``PrefixCache`` — content-addressed by a *rolling hash* over segment
+  token ids: digest(c) = H(digest(c-1) || tokens[c-th segment]), so all
+  boundary keys of a P-token prompt cost one O(P) pass. Lookup walks
+  boundaries longest-first and — hash collisions being cheap to fake and
+  catastrophic to serve — always verifies the full token ids of a
+  candidate before returning it.
+
+* ``SessionStore`` — multi-turn chat state: the *full* decode state of a
+  finished generation (recurrent memory + current-segment KV cache +
+  in-segment position) keyed by ``session_id``, plus any emitted-but-not-
+  yet-consumed tokens (``pending``) and the token history. The next turn
+  of the session resumes by transplanting the stored state and feeding
+  only ``pending + new_prompt`` — O(new turn), not O(history).
+
+Both stores share an LRU byte-budget evictor. Evicted payloads spill to
+host disk through ``checkpoint.manager.CheckpointManager`` named blobs when
+a spill directory is configured (restored transparently on the next hit);
+without spill, an evicted prefix is simply a future cache miss, while an
+evicted session becomes a tombstone — resuming it raises ``SessionEvicted``
+rather than silently serving a turn with amnesia.
+
+Snapshots are stored as whatever arrays the caller hands over (device
+arrays straight out of the jitted prefill/drain — nothing forces a
+device->host sync at capture time; byte accounting uses shape/dtype only).
+Arrays only cross to host when an entry is spilled to disk.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["SegmentSnapshot", "SessionEntry", "SessionEvicted",
+           "PrefixCache", "SessionStore", "prefix_hash_chain",
+           "tree_nbytes"]
+
+
+def tree_nbytes(tree: Any) -> int:
+    """Total payload bytes of a pytree of (np or jax) arrays — from
+    shape/dtype metadata only, no device sync."""
+    import jax
+    return sum(int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
+               for a in jax.tree_util.tree_leaves(tree))
+
+
+def prefix_hash_chain(tokens: np.ndarray, seg_len: int) -> List[bytes]:
+    """Rolling hash over segment token ids: entry c-1 keys the boundary
+    after c full segments. digest(c) = H(digest(c-1) || segment_c), so the
+    whole chain for a P-token prompt is one O(P) pass and extending a
+    cached prefix by one segment is O(seg_len)."""
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    assert toks.ndim == 1, toks.shape
+    out: List[bytes] = []
+    h = b"rmt-prefix-v1"
+    for c in range(toks.shape[0] // seg_len):
+        seg = toks[c * seg_len:(c + 1) * seg_len]
+        h = hashlib.blake2b(h + seg.tobytes(), digest_size=16).digest()
+        out.append(h)
+    return out
+
+
+@dataclass
+class SegmentSnapshot:
+    """Recurrent state at a segment boundary (pos=0, segment cache empty)."""
+    tokens: np.ndarray        # int32 [c * seg_len] — the exact prefix
+    state: Any                # {'prelude','pattern'} recurrent leaves, B=1
+    logits: Any               # [1, V] fp32 logits at the boundary
+    n_segments: int
+    nbytes: int
+
+
+@dataclass
+class SessionEntry:
+    """Persisted end-of-generation state of one conversation."""
+    tokens: np.ndarray        # int32 — full consumed history (prompt+output)
+    state: Any                # {'prelude','pattern'} full decode leaves, B=1
+    pos: int                  # in-segment position of `state`
+    pending: np.ndarray       # int32 — emitted but not yet consumed tokens;
+    #                           fed before the next turn's prompt on resume
+    nbytes: int = 0
+
+
+class SessionEvicted(KeyError):
+    """The session's state was evicted under the byte budget with no disk
+    spill configured — it cannot be resumed exactly."""
+
+
+# ---------------------------------------------------------------------------
+# Shared LRU byte-budget store with optional disk spill
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Slot:
+    payload: Any              # pytree of arrays; None when spilled/dropped
+    meta: Dict[str, Any]      # small host-resident metadata (tokens, pos, ..)
+    nbytes: int
+    spilled: bool = False
+    treedef: Any = None       # kept while spilled, to rebuild the pytree
+
+
+@dataclass
+class StoreStats:
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    spills: int = 0
+    restores: int = 0
+    collisions: int = 0
+    bytes_in_ram: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(vars(self))
+
+
+class _ByteLRU:
+    """OrderedDict-backed LRU keyed by opaque strings/bytes; payloads are
+    pytrees of arrays. Over-budget entries are evicted oldest-first: spilled
+    to disk via CheckpointManager named blobs when available, else dropped
+    (optionally leaving a tombstone so the owner can distinguish "never
+    seen" from "lost")."""
+
+    def __init__(self, max_bytes: int, *, spill=None, spill_dir=None,
+                 namespace: str = "blob", tombstone_on_drop: bool = False):
+        if spill is None and spill_dir is not None:
+            from repro.checkpoint.manager import CheckpointManager
+            spill = CheckpointManager(spill_dir, keep=0, async_save=False)
+        self.max_bytes = int(max_bytes)
+        self.spill = spill
+        self.namespace = namespace
+        self.tombstone_on_drop = tombstone_on_drop
+        self.entries: "OrderedDict[Any, _Slot]" = OrderedDict()
+        self.tombstones: set = set()
+        self.stats = StoreStats()
+
+    # -- helpers ----------------------------------------------------------
+    def _spill_name(self, key) -> str:
+        k = key.hex() if isinstance(key, bytes) else str(key)
+        return f"{self.namespace}/{k}"
+
+    def _evict_to_budget(self) -> None:
+        import jax
+        while self.stats.bytes_in_ram > self.max_bytes:
+            victim = next((k for k, s in self.entries.items()
+                           if s.payload is not None), None)
+            if victim is None:
+                return
+            slot = self.entries[victim]
+            self.stats.bytes_in_ram -= slot.nbytes
+            self.stats.evictions += 1
+            if self.spill is not None:
+                leaves, treedef = jax.tree_util.tree_flatten(slot.payload)
+                self.spill.save_named(
+                    self._spill_name(victim),
+                    {str(i): np.asarray(a) for i, a in enumerate(leaves)})
+                slot.treedef = treedef
+                slot.payload, slot.spilled = None, True
+                self.stats.spills += 1
+            else:
+                del self.entries[victim]
+                if self.tombstone_on_drop:
+                    self.tombstones.add(victim)
+
+    # -- public -----------------------------------------------------------
+    def put(self, key, payload: Any, meta: Dict[str, Any]) -> None:
+        old = self.entries.pop(key, None)
+        if old is not None and old.payload is not None:
+            self.stats.bytes_in_ram -= old.nbytes
+        self.tombstones.discard(key)
+        nbytes = tree_nbytes(payload)
+        self.entries[key] = _Slot(payload=payload, meta=meta, nbytes=nbytes)
+        self.stats.bytes_in_ram += nbytes
+        self.stats.insertions += 1
+        self._evict_to_budget()
+
+    def get(self, key) -> Optional[_Slot]:
+        """Returns the slot with payload resident (restoring from disk if it
+        was spilled), or None if unknown. Raises KeyError via the owner for
+        tombstoned keys — the owner checks ``is_tombstoned`` first."""
+        slot = self.entries.get(key)
+        if slot is None:
+            return None
+        if slot.payload is None and slot.spilled:
+            import jax
+            arrays = self.spill.restore_named(self._spill_name(key))
+            slot.payload = jax.tree_util.tree_unflatten(
+                slot.treedef, list(arrays.values()))
+            slot.spilled, slot.treedef = False, None
+            self.stats.bytes_in_ram += slot.nbytes
+            self.stats.restores += 1
+            # a burst of restores must not grow resident bytes past the
+            # budget — re-evict after unspilling. The restored entry is
+            # made MRU first, so it is spilled straight back only if it
+            # alone exceeds the budget; in that case the caller gets a
+            # transient view holding the payload (its RAM is freed when
+            # the caller drops it) while the store keeps only the stub.
+            self.entries.move_to_end(key)
+            payload = slot.payload
+            self._evict_to_budget()
+            if slot.payload is None:
+                return _Slot(payload=payload, meta=slot.meta,
+                             nbytes=slot.nbytes)
+        self.entries.move_to_end(key)
+        return slot
+
+    def is_tombstoned(self, key) -> bool:
+        return key in self.tombstones
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self.entries
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache
+# ---------------------------------------------------------------------------
+
+class PrefixCache:
+    """Content-addressed cache of segment-boundary snapshots.
+
+    Keys are the rolling segment hash (prefix_hash_chain); a match walks a
+    prompt's boundaries longest-first and verifies the candidate's full
+    token ids before returning it (hash-collision safety — a colliding key
+    must never transplant someone else's memory state).
+    """
+
+    def __init__(self, seg_len: int, *, max_bytes: int = 256 << 20,
+                 spill_dir=None, spill=None):
+        assert seg_len >= 1
+        self.seg_len = seg_len
+        self._lru = _ByteLRU(max_bytes, spill=spill, spill_dir=spill_dir,
+                             namespace="prefix", tombstone_on_drop=False)
+
+    @property
+    def stats(self) -> StoreStats:
+        return self._lru.stats
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def match(self, tokens: np.ndarray, *, chain: Optional[List[bytes]] = None
+              ) -> Tuple[int, Optional[SegmentSnapshot]]:
+        """Longest cached prefix of ``tokens`` at segment granularity.
+        Returns (n_cached_segments, snapshot) — (0, None) on a miss.
+        chain: this prompt's precomputed prefix_hash_chain, so one O(P)
+        pass serves both the match and every subsequent insert."""
+        tokens = np.asarray(tokens, np.int32)
+        if chain is None:
+            chain = prefix_hash_chain(tokens, self.seg_len)
+        for c in range(len(chain), 0, -1):
+            key = chain[c - 1]
+            slot = self._lru.entries.get(key)
+            if slot is None:
+                continue
+            if not np.array_equal(slot.meta["tokens"], tokens[:c * self.seg_len]):
+                # hash collision: the stored prefix is NOT this prompt's
+                # prefix — serving it would transplant another context's
+                # memory. Fall through to shorter boundaries.
+                self._lru.stats.collisions += 1
+                continue
+            slot = self._lru.get(key)            # unspill + touch LRU
+            self._lru.stats.hits += 1
+            return c, SegmentSnapshot(
+                tokens=slot.meta["tokens"],
+                state=slot.payload["state"], logits=slot.payload["logits"],
+                n_segments=c, nbytes=slot.nbytes)
+        self._lru.stats.misses += 1
+        return 0, None
+
+    def insert(self, tokens: np.ndarray, state: Any, logits: Any,
+               *, key: Optional[bytes] = None) -> bool:
+        """Cache the boundary snapshot for the full-segment prefix
+        ``tokens`` (length must be a segment multiple). Returns False if an
+        identical prefix is already cached (its LRU recency is refreshed).
+        key: this prefix's rolling-hash digest when the caller already
+        computed the chain (one pass per admission, not one per boundary —
+        the hash-chain cost stays O(P) even for prompts with hundreds of
+        segments)."""
+        tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        assert tokens.ndim == 1 and tokens.shape[0] % self.seg_len == 0, \
+            tokens.shape
+        if key is None:
+            key = prefix_hash_chain(tokens, self.seg_len)[-1]
+        slot = self._lru.entries.get(key)
+        if slot is not None and np.array_equal(slot.meta["tokens"], tokens):
+            self._lru.entries.move_to_end(key)
+            return False
+        self._lru.put(key, {"state": state, "logits": logits},
+                      {"tokens": tokens})
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Session store
+# ---------------------------------------------------------------------------
+
+class SessionStore:
+    """End-of-generation decode states keyed by session_id, for O(new turn)
+    multi-turn resume. ``get`` returns None for a session never seen (first
+    turn) and raises SessionEvicted for one dropped under the byte budget
+    without disk spill — the two must not be confused, or a lost session
+    would silently restart with no memory of the conversation."""
+
+    def __init__(self, *, max_bytes: int = 512 << 20, spill_dir=None,
+                 spill=None):
+        self._lru = _ByteLRU(max_bytes, spill=spill, spill_dir=spill_dir,
+                             namespace="session", tombstone_on_drop=True)
+
+    @property
+    def stats(self) -> StoreStats:
+        return self._lru.stats
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def __contains__(self, session_id: str) -> bool:
+        return session_id in self._lru
+
+    def get(self, session_id: str) -> Optional[SessionEntry]:
+        if self._lru.is_tombstoned(session_id):
+            raise SessionEvicted(
+                f"session {session_id!r} was evicted under the byte budget "
+                "(no spill dir configured); it cannot be resumed exactly")
+        slot = self._lru.get(session_id)
+        if slot is None:
+            self._lru.stats.misses += 1
+            return None
+        self._lru.stats.hits += 1
+        return SessionEntry(tokens=slot.meta["tokens"], state=slot.payload,
+                            pos=slot.meta["pos"],
+                            pending=slot.meta["pending"], nbytes=slot.nbytes)
+
+    def put(self, session_id: str, *, state: Any, pos: int,
+            pending: np.ndarray, tokens: np.ndarray) -> None:
+        self._lru.put(session_id, state,
+                      {"tokens": np.asarray(tokens, np.int32),
+                       "pos": int(pos),
+                       "pending": np.asarray(pending, np.int32)})
+
+    def delete(self, session_id: str) -> None:
+        slot = self._lru.entries.pop(session_id, None)
+        if slot is not None and slot.payload is not None:
+            self._lru.stats.bytes_in_ram -= slot.nbytes
+        self._lru.tombstones.discard(session_id)

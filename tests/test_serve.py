@@ -12,7 +12,8 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models import (decode_state_init, decode_step, flush_segment,
                           init_params, mask_decode_state)
-from repro.serve import ContinuousScheduler, Request, ServeEngine, StreamEvent
+from repro.serve import (ContinuousScheduler, Request, RequestError,
+                         ServeEngine, StreamEvent)
 
 
 @pytest.fixture(scope="module")
@@ -65,11 +66,14 @@ def test_scheduler_cache_mode(setup):
     cfg = dataclasses.replace(cfg, armt=None)
     params = init_params(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(params, cfg, serve_mode="cache", max_len=64)
-    # KV-cache overflow is refused, not silently clamped
+    # KV-cache overflow is refused, not silently clamped: generate raises,
+    # the scheduler streams a structured RequestError (never raises
+    # mid-serve — see test_state_store.py for the full error-event matrix)
     with pytest.raises(ValueError, match="max_len"):
         eng.generate(jnp.zeros((1, 60), jnp.int32), 5)
-    with pytest.raises(ValueError, match="max_len"):
-        list(eng.serve(_requests(cfg, [60], 5), n_slots=1))
+    evs = list(eng.serve(_requests(cfg, [60], 5), n_slots=1))
+    assert [type(e) for e in evs] == [RequestError]
+    assert evs[0].code == "invalid_request" and "max_len" in evs[0].message
     reqs = _requests(cfg, [9, 21, 14], 5)
     outs, done = _collect(eng.serve(reqs, n_slots=2, chunk=3))
     assert len(done) == 3
@@ -89,7 +93,7 @@ def test_generate_matches_host_stepped_reference(setup):
     max_new = 2 * seg    # crosses at least one segment boundary mid-decode
     got = eng.generate(prompts, max_new).tokens
 
-    logits, st, pos = eng._prefill(prompts)
+    logits, st, pos, _cached = eng._prefill(prompts)
     step = jax.jit(lambda s, t: decode_step(params, cfg, s, t,
                                             serve_mode="armt"))
     flush = jax.jit(lambda s: flush_segment(params, cfg, s))

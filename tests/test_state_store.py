@@ -1,0 +1,401 @@
+"""Serving state store (serve/state_store.py, DESIGN.md §9): boundary
+snapshot capture, segment-granular prefix caching (token-identical greedy
+across boundary phases, collision-safe, LRU byte budget, disk spill),
+multi-turn session resume (== one long concatenated generate), power-of-two
+prompt bucketing, structured scheduler errors, and serving metrics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.memory import recurrent_state
+from repro.models import forward_hidden, init_params
+from repro.serve import (PrefixCache, Request, RequestError, ServeEngine,
+                         SessionEvicted, SessionStore, StreamEvent,
+                         prefix_hash_chain)
+from repro.serve.engine import _pow2_chunks
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def base_eng(setup):
+    cfg, params = setup
+    return ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+
+
+def _toks(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(8, cfg.vocab, (n,)).astype(np.int32)
+
+
+def _leaves_close(a, b, **kw):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Capture path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", ["diagonal", "sequential"])
+def test_boundary_capture_matches_prefix_forward(setup, schedule):
+    """Snapshot at boundary c (assembled from the executor's per-step
+    capture — for the diagonal schedule that means re-indexing the drain's
+    staggered emissions) == final state of a fresh forward over the first
+    c segments."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    S = 4
+    toks = jnp.asarray(_toks(cfg, S * seg, seed=11)[None])
+    _, fin, cap = forward_hidden(params, cfg, toks, schedule=schedule,
+                                 capture_states=True)
+    for c in (1, 3, S):
+        _, fin_c = forward_hidden(params, cfg, toks[:, :c * seg],
+                                  schedule=schedule)
+        got = jax.tree_util.tree_map(lambda a, _c=c: a[_c - 1], cap)
+        _leaves_close(recurrent_state(fin_c), got, atol=1e-6, rtol=1e-6)
+    # boundary S == the run's own final state
+    _leaves_close(recurrent_state(fin),
+                  jax.tree_util.tree_map(lambda a: a[S - 1], cap),
+                  atol=0, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_hit_token_identical(setup, base_eng):
+    """Acceptance: shared-prefix admissions with >=1 cached segment are
+    token-identical (greedy) to the uncached engine across tail phases —
+    empty tail (exact full-prefix hit: zero forward work), one token,
+    one-short-of-boundary, and past-the-next-boundary."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    cache = PrefixCache(seg)
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      prefix_cache=cache)
+    shared = _toks(cfg, 3 * seg, seed=1)
+    cold = eng.generate(jnp.asarray(shared[None]), 4)      # fills the cache
+    assert cold.cached_segments == 0
+    assert (cold.tokens ==
+            base_eng.generate(jnp.asarray(shared[None]), 4).tokens).all()
+    for i, tail_len in enumerate((0, 1, seg - 1, seg + 3)):
+        prompt = np.concatenate([shared, _toks(cfg, tail_len, seed=20 + i)])
+        hit = eng.generate(jnp.asarray(prompt[None]), 4)
+        ref = base_eng.generate(jnp.asarray(prompt[None]), 4)
+        assert (hit.tokens == ref.tokens).all(), f"tail={tail_len}"
+        assert hit.cached_segments == 3, f"tail={tail_len}"
+    assert cache.stats.hits >= 4
+
+
+def test_prefix_cache_longest_match_wins(setup, base_eng):
+    """A prompt sharing only a shorter prefix matches the shorter boundary;
+    growing the cache then upgrades the match."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    cache = PrefixCache(seg)
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      prefix_cache=cache)
+    a = _toks(cfg, 4 * seg, seed=2)
+    eng.generate(jnp.asarray(a[None]), 2)        # boundaries 1..4 cached
+    b = np.concatenate([a[:2 * seg], _toks(cfg, 2 * seg, seed=3)])
+    r = eng.generate(jnp.asarray(b[None]), 4)
+    assert r.cached_segments == 2                # diverges after segment 2
+    assert (r.tokens ==
+            base_eng.generate(jnp.asarray(b[None]), 4).tokens).all()
+    r2 = eng.generate(jnp.asarray(b[None]), 4)   # b's own boundaries now in
+    assert r2.cached_segments == 4
+    assert (r2.tokens == r.tokens).all()
+
+
+def test_hash_collision_full_verification(setup):
+    """A forged hash collision must not transplant a different prefix's
+    state: match verifies full token ids and falls through."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    cache = PrefixCache(seg)
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      prefix_cache=cache)
+    a = _toks(cfg, 2 * seg, seed=4)
+    eng.generate(jnp.asarray(a[None]), 2)
+    other = _toks(cfg, 2 * seg, seed=5)
+    # forge: rekey a's 2-segment entry under other's 2-segment digest
+    key_a = prefix_hash_chain(a, seg)[-1]
+    key_other = prefix_hash_chain(other, seg)[-1]
+    lru = cache._lru
+    lru.entries[key_other] = lru.entries.pop(key_a)
+    before = cache.stats.collisions
+    n, snap = cache.match(other)
+    assert n == 0 and snap is None
+    assert cache.stats.collisions > before
+
+
+def test_lru_eviction_byte_budget(setup):
+    """Entries are evicted oldest-first under the byte budget; a hit
+    refreshes recency."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    probe = PrefixCache(seg)
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      prefix_cache=probe)
+    eng.generate(jnp.asarray(_toks(cfg, seg, seed=6)[None]), 2)
+    one = probe.stats.bytes_in_ram                 # bytes per 1 snapshot
+    assert one > 0
+
+    cache = PrefixCache(seg, max_bytes=3 * one + one // 2)
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      prefix_cache=cache)
+    prompts = [_toks(cfg, seg, seed=10 + i) for i in range(3)]
+    for p in prompts:
+        eng.generate(jnp.asarray(p[None]), 2)
+    assert len(cache) == 3 and cache.stats.evictions == 0
+    assert cache.match(prompts[0])[0] == 1         # touch: now most-recent
+    eng.generate(jnp.asarray(_toks(cfg, seg, seed=13)[None]), 2)
+    assert cache.stats.evictions == 1
+    assert cache.stats.bytes_in_ram <= cache._lru.max_bytes
+    assert cache.match(prompts[0])[0] == 1         # survivor (was touched)
+    assert cache.match(prompts[1])[0] == 0         # LRU victim
+
+
+def test_spill_to_disk_and_restore(setup, base_eng, tmp_path):
+    """Evictions spill through CheckpointManager named blobs; a later hit
+    restores the snapshot and still serves token-identical output."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    probe = PrefixCache(seg)
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      prefix_cache=probe)
+    p0 = _toks(cfg, seg, seed=30)
+    eng.generate(jnp.asarray(p0[None]), 2)
+    one = probe.stats.bytes_in_ram
+
+    cache = PrefixCache(seg, max_bytes=one + one // 2,
+                        spill_dir=tmp_path / "spill")
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      prefix_cache=cache)
+    p1 = _toks(cfg, seg, seed=31)
+    eng.generate(jnp.asarray(p0[None]), 2)
+    eng.generate(jnp.asarray(p1[None]), 2)         # evicts+spills p0's entry
+    assert cache.stats.spills >= 1
+    prompt = np.concatenate([p0, _toks(cfg, 3, seed=32)])
+    hit = eng.generate(jnp.asarray(prompt[None]), 4)
+    assert hit.cached_segments == 1
+    assert cache.stats.restores >= 1
+    ref = base_eng.generate(jnp.asarray(prompt[None]), 4)
+    assert (hit.tokens == ref.tokens).all()
+
+
+def test_rolling_hash_is_prefix_stable(setup):
+    cfg, _ = setup
+    a = _toks(cfg, 64, seed=7)
+    b = np.concatenate([a, _toks(cfg, 32, seed=8)])
+    ca, cb = prefix_hash_chain(a, 16), prefix_hash_chain(b, 16)
+    assert cb[:len(ca)] == ca                      # chain extends, not rehashes
+    assert len(set(cb)) == len(cb)
+
+
+# ---------------------------------------------------------------------------
+# Session store
+# ---------------------------------------------------------------------------
+
+def test_session_resume_matches_concatenated_generate(setup, base_eng):
+    """Acceptance: a greedy multi-turn session (each turn feeds only its
+    new tokens) is token-identical to re-prefilling the concatenated
+    history, across in-segment and cross-segment turn boundaries."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    store = SessionStore()
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      session_store=store)
+    turns = [_toks(cfg, seg + 5, seed=40), _toks(cfg, 7, seed=41),
+             _toks(cfg, 2 * seg, seed=42)]
+    history = np.empty(0, np.int32)
+    for i, t in enumerate(turns):
+        r = eng.generate(jnp.asarray(t[None]), 6, session_id="conv")
+        assert r.resumed == (i > 0)
+        ref = base_eng.generate(
+            jnp.asarray(np.concatenate([history, t])[None]), 6)
+        assert (r.tokens == ref.tokens).all(), f"turn {i}"
+        history = np.concatenate([history, t, r.tokens[0]]).astype(np.int32)
+    assert store.get("conv").tokens.shape[0] == history.shape[0]
+
+
+def test_scheduler_session_resume(setup, base_eng):
+    """Sessions through the continuous scheduler: the packed chunk freezes
+    a finished slot's row bit-exactly, the row is lifted out at the chunk
+    boundary, and the next turn (scheduler or single-shot generate) resumes
+    token-identically."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    store = SessionStore()
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      session_store=store)
+    p1, p2 = _toks(cfg, 2 * seg + 3, seed=50), _toks(cfg, 9, seed=51)
+
+    def drive(reqs):
+        outs = {}
+        for ev in eng.serve(reqs, n_slots=2, chunk=3):
+            assert isinstance(ev, StreamEvent), ev
+            outs.setdefault(ev.req_id, []).append(ev.token)
+        return outs
+
+    o1 = drive([Request("t1", p1, 7, session_id="c"),
+                Request("x", _toks(cfg, 5, seed=52), 4)])  # a co-batched req
+    o2 = drive([Request("t2", p2, 7, session_id="c")])
+    hist = np.concatenate([p1, np.asarray(o1["t1"], np.int32), p2])
+    ref = base_eng.generate(jnp.asarray(hist[None]), 7)
+    assert o2["t2"] == ref.tokens[0].tolist()
+    # third turn via generate: scheduler-persisted state is interchangeable
+    p3 = _toks(cfg, 4, seed=53)
+    g = eng.generate(jnp.asarray(p3[None]), 4, session_id="c")
+    hist = np.concatenate([hist, np.asarray(o2["t2"], np.int32), p3])
+    assert (g.tokens ==
+            base_eng.generate(jnp.asarray(hist[None]), 4).tokens).all()
+
+
+def test_session_eviction_is_loud(setup):
+    """An evicted (no-spill) session raises on generate and becomes a
+    structured session_evicted event on the scheduler stream — never a
+    silent fresh-context resume."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    store = SessionStore(max_bytes=1)              # evict everything
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      session_store=store)
+    eng.generate(jnp.asarray(_toks(cfg, seg, seed=60)[None]), 3,
+                 session_id="gone")
+    assert store.stats.evictions == 1
+    with pytest.raises(SessionEvicted):
+        eng.generate(jnp.asarray(_toks(cfg, 4, seed=61)[None]), 3,
+                     session_id="gone")
+    evs = list(eng.serve([Request("r", _toks(cfg, 4, seed=62), 3,
+                                  session_id="gone")], n_slots=1))
+    assert [type(e) for e in evs] == [RequestError]
+    assert evs[0].code == "session_evicted"
+    # unknown session ids are NOT evicted ones: first turn just works
+    evs = list(eng.serve([Request("r2", _toks(cfg, 4, seed=63), 3,
+                                  session_id="fresh")], n_slots=1))
+    assert sum(isinstance(e, StreamEvent) for e in evs) == 3
+
+
+def test_session_spill_roundtrip(setup, base_eng, tmp_path):
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    store = SessionStore(max_bytes=1, spill_dir=tmp_path / "sessions")
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      session_store=store)
+    p1, p2 = _toks(cfg, seg + 2, seed=64), _toks(cfg, 5, seed=65)
+    r1 = eng.generate(jnp.asarray(p1[None]), 4, session_id="s")
+    assert store.stats.spills == 1                 # budget 1 byte: spilled
+    r2 = eng.generate(jnp.asarray(p2[None]), 4, session_id="s")
+    assert store.stats.restores == 1 and r2.resumed
+    ref = base_eng.generate(
+        jnp.asarray(np.concatenate([p1, r1.tokens[0], p2])[None]), 4)
+    assert (r2.tokens == ref.tokens).all()
+
+
+# ---------------------------------------------------------------------------
+# Prompt bucketing (admission jit-cache bound)
+# ---------------------------------------------------------------------------
+
+def test_pow2_chunks():
+    assert _pow2_chunks(13) == [8, 4, 1]
+    assert _pow2_chunks(1) == [1]
+    assert _pow2_chunks(16) == [16]
+    for n in range(1, 70):
+        parts = _pow2_chunks(n)
+        assert sum(parts) == n
+        assert all(p & (p - 1) == 0 for p in parts)
+        assert parts == sorted(parts, reverse=True)
+
+
+def test_bucketed_prefill_token_identical_and_bounded(setup):
+    """Satellite acceptance: bucketed admission (the default) is
+    token-identical (greedy) to the unbucketed path for every prompt
+    length, and the number of compiled decode_step shapes stays
+    logarithmic, not linear, in the lengths seen."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    bucketed = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    flat = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                       bucket_prompts=False)
+    assert bucketed.bucket_prompts and not flat.bucket_prompts
+    lens = [1, 3, seg - 1, seg, seg + 1, 2 * seg + 5, 3 * seg + seg // 2 + 1]
+    for i, L in enumerate(lens):
+        p = jnp.asarray(_toks(cfg, L, seed=70 + i)[None])
+        a = bucketed.generate(p, 4)
+        b = flat.generate(p, 4)
+        assert (a.tokens == b.tokens).all(), f"len={L}"
+    if hasattr(bucketed._step, "_cache_size"):
+        # chunked-prefill shapes: powers of two <= seg plus the [B,1] decode
+        # step — vs one compile per distinct tail length unbucketed
+        n_pow2 = seg.bit_length()
+        assert bucketed._step._cache_size() <= n_pow2 + 1
+
+
+# ---------------------------------------------------------------------------
+# Structured scheduler errors + serving metrics
+# ---------------------------------------------------------------------------
+
+def test_scheduler_structured_errors(setup):
+    """Queue-full and invalid requests come back as in-band RequestError
+    events; valid co-queued requests still complete. Free slots count as
+    capacity: queue_full fires only when all slots are busy AND the
+    backlog is at its limit."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    bad_new = Request("bad_new", _toks(cfg, 5, seed=81), 0)
+    ok = Request("ok", _toks(cfg, 5, seed=80), 3)
+    bad_prompt = Request("bad_prompt", np.empty(0, np.int32), 3)
+    ok2 = Request("ok2", _toks(cfg, 5, seed=82), 3)
+    overflow = Request("overflow", _toks(cfg, 5, seed=83), 3)
+    # 1 slot + queue of 2: bad_new rejected at admission (slot was free),
+    # ok takes the slot, bad_prompt+ok2 queue, overflow exceeds capacity
+    evs = list(eng.serve([bad_new, ok, bad_prompt, ok2, overflow],
+                         n_slots=1, chunk=2, max_queue=2))
+    errs = {e.req_id: e.code for e in evs if isinstance(e, RequestError)}
+    assert errs == {"bad_new": "invalid_request",
+                    "bad_prompt": "invalid_request",
+                    "overflow": "queue_full"}
+    toks = [e for e in evs if isinstance(e, StreamEvent)]
+    assert [e.req_id for e in toks] == ["ok"] * 3 + ["ok2"] * 3
+    assert toks[2].done and toks[-1].done
+    # a queue-sized burst with a free slot is NOT queue_full: slots are
+    # capacity too, so n_slots + max_queue requests all complete
+    evs = list(eng.serve([Request(f"r{i}", _toks(cfg, 5, seed=84 + i), 2)
+                          for i in range(3)], n_slots=1, chunk=2,
+                         max_queue=2))
+    assert not any(isinstance(e, RequestError) for e in evs)
+    assert sum(e.done for e in evs if isinstance(e, StreamEvent)) == 3
+    # session_id without a store on the engine is rejected, not crashed
+    evs = list(eng.serve([Request("s", _toks(cfg, 5, seed=83), 2,
+                                  session_id="nope")], n_slots=1))
+    assert [type(e) for e in evs] == [RequestError]
+    assert evs[0].code == "invalid_request"
+
+
+def test_serving_metrics(setup):
+    """GenerationResult and StreamEvent carry host-clock TTFT / tok/s."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    r = eng.generate(jnp.asarray(_toks(cfg, 20, seed=90)[None]), 5)
+    assert r.ttft_s > 0 and r.tok_s > 0
+    first, last = None, None
+    for ev in eng.serve([Request("m", _toks(cfg, 20, seed=91), 5)],
+                        n_slots=1, chunk=2):
+        first = first or ev
+        last = ev
+    assert first.ttft_s is not None and first.ttft_s > 0
+    assert last.done and last.ttft_s == first.ttft_s
+    assert last.tok_s is not None and last.tok_s > 0
