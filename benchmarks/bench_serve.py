@@ -18,6 +18,15 @@ Two state-store workloads (serve/state_store.py):
     admission time = ``GenerationResult.ttft_s``.
   * multi_turn — a T-turn conversation; re-prefill-the-history baseline vs
     session-store resume (O(new turn) admission).
+
+``--mesh data=2,model=4`` (launch/mesh.py spec syntax) adds a mesh-native
+pass (DESIGN.md §10): the same request set through a sharded engine,
+recorded as ``mesh_results`` with its mesh shape inline. The main
+``results`` trajectory always stays single-device so it remains comparable
+across PRs; ``device_count`` is recorded top-level for hardware
+provenance. On CPU a mesh needs
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before Python
+starts.
 """
 from __future__ import annotations
 
@@ -178,7 +187,8 @@ def _bench_multi_turn(cfg, params, quick: bool):
     return rec
 
 
-def bench_serve(quick: bool = True, out_path: str | None = None):
+def bench_serve(quick: bool = True, out_path: str | None = None,
+                mesh_spec: str | None = None):
     cfg = _config()
     params = init_params(cfg, jax.random.PRNGKey(0))
     max_new = 32 if quick else 128
@@ -186,15 +196,21 @@ def bench_serve(quick: bool = True, out_path: str | None = None):
     slot_counts = (1, 2, 4) if quick else (1, 2, 4, 8)
     n_req = 2 * max(slot_counts)
 
+    mesh = None
+    if mesh_spec:
+        from repro.launch.mesh import parse_mesh
+        mesh = parse_mesh(mesh_spec)
+        row("serve_mesh", 0.0, f"{dict(mesh.shape)}")
+
     eng = ServeEngine(params, cfg, serve_mode="armt",
                       max_len=4 * SEG + max_new)
     reqs = _requests(cfg, n_req, max_new)
 
-    def warm(n_slots):
+    def warm(engine, n_slots):
         # compile prefill shapes and trace the shared packed step / admit
         # fns for this slot count, so the timed pass measures steady state
-        for _ in eng.serve(_requests(cfg, max(2, n_slots), chunk, seed=1),
-                           n_slots=n_slots, chunk=chunk):
+        for _ in engine.serve(_requests(cfg, max(2, n_slots), chunk, seed=1),
+                              n_slots=n_slots, chunk=chunk):
             pass
 
     # no-continuous-batching baseline: one request at a time
@@ -209,7 +225,7 @@ def bench_serve(quick: bool = True, out_path: str | None = None):
 
     results = []
     for n_slots in slot_counts:
-        warm(n_slots)
+        warm(eng, n_slots)
         rec = {"n_slots": n_slots, "n_requests": n_req, "max_new": max_new,
                "chunk": chunk}
         rec.update(_drive(eng, reqs, n_slots, chunk))
@@ -219,6 +235,27 @@ def bench_serve(quick: bool = True, out_path: str | None = None):
             f"{rec['throughput_tok_s']:.1f} tok/s "
             f"ttft={rec['ttft_s_mean']:.3f}s")
 
+    # mesh-native pass (DESIGN.md §10): same request set through a sharded
+    # engine, its own record annotated with the mesh shape — the single-
+    # device trajectory above stays comparable across hardware, and this
+    # section tracks what the mesh costs/buys on the same workload
+    mesh_results = None
+    if mesh is not None:
+        eng_m = ServeEngine(params, cfg, serve_mode="armt",
+                            max_len=4 * SEG + max_new, mesh=mesh)
+        n_slots = max(slot_counts)
+        warm(eng_m, n_slots)
+        rec = {"mesh": dict(mesh.shape), "device_count": jax.device_count(),
+               "n_slots": n_slots, "n_requests": n_req, "max_new": max_new,
+               "chunk": chunk}
+        rec.update(_drive(eng_m, reqs, n_slots, chunk))
+        mesh_results = rec
+        row(f"serve_mesh_slots{n_slots}", rec["wall_s"],
+            f"{rec['throughput_tok_s']:.1f} tok/s on {dict(mesh.shape)}")
+
+    # store workloads stay mesh-less so their TTFT trajectories remain
+    # comparable across PRs; sharded store exactness is covered by
+    # tests/test_serve_sharded.py
     shared_prefix = _bench_shared_prefix(cfg, params, quick)
     multi_turn = _bench_multi_turn(cfg, params, quick)
 
@@ -229,12 +266,17 @@ def bench_serve(quick: bool = True, out_path: str | None = None):
     payload = {
         "bench": "serve_continuous_batching",
         "backend": jax.default_backend(),
+        # hardware provenance; the mesh shape lives inside mesh_results —
+        # the only record actually produced on a mesh (results/shared_prefix/
+        # multi_turn are always single-device for cross-PR comparability)
+        "device_count": jax.device_count(),
         "segment_len": SEG,
         "model": {"n_layers": cfg.n_layers, "d_model": cfg.d_model,
                   "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
                   "num_mem_tokens": cfg.armt.num_mem_tokens},
         "baseline_one_by_one_tok_s": baseline_tok_s,
         "results": results,
+        "mesh_results": mesh_results,
         "shared_prefix": shared_prefix,
         "multi_turn": multi_turn,
     }
@@ -246,8 +288,19 @@ def bench_serve(quick: bool = True, out_path: str | None = None):
 
 
 def main(quick: bool = True):
-    bench_serve(quick)
+    # benchmarks.run entry point: mesh (if any) comes from BENCH_SERVE_MESH
+    # so the harness signature stays uniform across benches
+    bench_serve(quick, mesh_spec=os.environ.get("BENCH_SERVE_MESH"))
 
 
 if __name__ == "__main__":
-    main(quick=False)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--mesh", default=None, metavar="AXES",
+                    help="mesh-native engines, e.g. 'data=2,model=4' "
+                         "(launch/mesh.py syntax); on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N before "
+                         "Python starts")
+    args = ap.parse_args()
+    bench_serve(quick=args.quick, mesh_spec=args.mesh)

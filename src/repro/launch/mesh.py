@@ -21,6 +21,76 @@ def make_host_mesh(model_axis: int = 1):
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
+_MESH_AXES = ("pod", "data", "model", "stage")
+
+
+def parse_mesh(spec: str, devices=None):
+    """Build a Mesh from a ``--mesh`` flag value: comma-separated
+    ``axis[=size]`` entries, axes from {pod, data, model, stage} in that
+    order. At most one axis may omit its size — it absorbs the devices the
+    explicit axes leave over. The sizes must use *every* available device
+    (subsetting silently would falsify the device_count provenance recorded
+    by benchmarks; pass ``devices=`` to use fewer). Examples (8 devices):
+
+        --mesh data=2,model=4        -> Mesh (2, 4) ('data', 'model')
+        --mesh data,model=4          -> data gets 8 // 4 = 2
+        --mesh data=2,stage=2        -> serving with pipeline slot sharding
+
+    The serving stack (`ServeEngine(mesh=...)`, DESIGN.md §10) derives all
+    placement from the axis *names*; sizes only pick how the device grid is
+    carved up."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = list(jax.devices()) if devices is None else list(devices)
+    axes, sizes, open_axis = [], [], None
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        name, _, size = entry.partition("=")
+        if name not in _MESH_AXES:
+            raise ValueError(
+                f"unknown mesh axis {name!r} in --mesh {spec!r}; "
+                f"choose from {_MESH_AXES}")
+        if name in axes:
+            raise ValueError(f"duplicate mesh axis {name!r} in {spec!r}")
+        if size:
+            if int(size) < 1:
+                raise ValueError(
+                    f"--mesh {spec!r}: axis size must be >= 1, got "
+                    f"{name}={size}")
+            axes.append(name), sizes.append(int(size))
+        else:
+            if open_axis is not None:
+                raise ValueError(
+                    f"--mesh {spec!r}: at most one axis may omit its size")
+            axes.append(name), sizes.append(0)
+            open_axis = len(axes) - 1
+    if not axes:
+        raise ValueError(f"empty --mesh spec {spec!r}")
+    axes = tuple(axes)
+    known = int(np.prod([s for s in sizes if s]))
+    if open_axis is not None:
+        if len(devices) % known:
+            raise ValueError(
+                f"--mesh {spec!r}: {known} explicit devices do not divide "
+                f"the {len(devices)} available")
+        sizes[open_axis] = len(devices) // known
+    total = int(np.prod(sizes))
+    if total != len(devices):
+        # never silently serve on a subset: device_count is recorded as
+        # provenance in bench metadata, so a mesh that quietly dropped
+        # devices would misstate every comparison keyed on it. To use fewer
+        # devices, pass devices= explicitly (or restrict visible devices).
+        raise ValueError(
+            f"--mesh {spec!r} carves {total} device(s) but {len(devices)} "
+            f"are available — add an open axis (e.g. 'data,{spec}') or "
+            "match the sizes to the device count")
+    grid = np.asarray(devices).reshape(tuple(sizes))
+    return Mesh(grid, axes)
+
+
 # TPU v5e hardware constants (per chip) — used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

@@ -14,6 +14,13 @@ Two modes:
     With ``--prefix-cache`` the requests share a system prompt and
     admission transplants the cached boundary snapshot (state store,
     DESIGN.md §9).
+
+Both modes accept ``--mesh data=2,model=4[,stage=..]`` (launch/mesh.py
+``parse_mesh``) for mesh-native serving (DESIGN.md §10): params shard over
+'model' (and the stacked pattern over 'stage'), decode slots over 'data',
+and the whole serve stack stays single jitted graphs with GSPMD inserting
+the collectives. Sharded serving is token-identical to single-device
+(tests/test_serve_sharded.py).
 """
 from __future__ import annotations
 
@@ -55,6 +62,13 @@ def main():
     ap.add_argument("--store-dir", default=None,
                     help="disk-spill directory for evicted store entries "
                          "(checkpoint-manager named blobs)")
+    ap.add_argument("--mesh", default=None, metavar="AXES",
+                    help="mesh-native serving (DESIGN.md §10): comma list of "
+                         "axis[=size] from {pod,data,model,stage}, e.g. "
+                         "'data=2,model=4' or 'data,model=2' (one size may "
+                         "be omitted). Params shard over 'model'/'stage', "
+                         "decode slots over 'data'; GSPMD does the "
+                         "collectives")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -70,6 +84,12 @@ def main():
     if args.continuous and (args.temperature > 0 or args.top_k > 0):
         ap.error("--continuous streams greedy tokens; --temperature/--top-k "
                  "apply to single-batch mode only")
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import parse_mesh
+        mesh = parse_mesh(args.mesh)
+        print(f"mesh: {dict(mesh.shape)} over {mesh.devices.size} "
+              f"{mesh.devices.flat[0].platform} device(s)")
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     seg = cfg.armt.segment_len if cfg.armt else 64
     prefix_cache = (PrefixCache(seg, max_bytes=int(args.prefix_cache_mb * 2**20),
@@ -82,7 +102,8 @@ def main():
     eng = ServeEngine(params, cfg, serve_mode=args.serve_mode,
                       schedule=args.schedule,
                       max_len=args.prompt_len + seg // 2 + args.max_new,
-                      prefix_cache=prefix_cache, session_store=session_store)
+                      prefix_cache=prefix_cache, session_store=session_store,
+                      mesh=mesh)
 
     if args.continuous:
         rng = np.random.default_rng(args.seed + 1)

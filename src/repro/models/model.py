@@ -87,6 +87,33 @@ def param_specs(cfg: ArchConfig, dtype=None):
         lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
 
 
+def decode_state_shapes(cfg: ArchConfig, batch: int, *, serve_mode: str,
+                        max_len: int, dtype, per_slot_pos: bool = False):
+    """Shape/dtype tree of a decode state without allocation — the
+    serve-side sibling of ``param_specs`` above."""
+    return jax.eval_shape(
+        lambda: decode_state_init(cfg, batch, serve_mode=serve_mode,
+                                  max_len=max_len, dtype=dtype,
+                                  per_slot_pos=per_slot_pos))
+
+
+def decode_state_sharding(cfg: ArchConfig, mesh, batch: int, *,
+                          serve_mode: str, max_len: int, dtype,
+                          per_slot_pos: bool = False,
+                          stacked_axis: Optional[str] = None):
+    """NamedSharding tree for a decode state on ``mesh``: slots/batch over
+    the DP axes, heads/d_model over 'model', pattern-stacked leaves
+    optionally over ``stacked_axis`` — the placement the mesh-native serve
+    stack (DESIGN.md §10) derives its pools, transplants, and snapshot
+    restores from."""
+    from repro.parallel import sharding as shd
+    shapes = decode_state_shapes(cfg, batch, serve_mode=serve_mode,
+                                 max_len=max_len, dtype=dtype,
+                                 per_slot_pos=per_slot_pos)
+    return shd.decode_state_specs(shapes, mesh, batch,
+                                  stacked_axis=stacked_axis)
+
+
 def init_state(cfg: ArchConfig, batch: int, mode: str, dtype) -> Dict:
     layout = StackLayout.from_config(cfg)
     state: Dict = {"prelude": tuple(

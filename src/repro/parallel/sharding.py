@@ -1,19 +1,46 @@
 """Sharding rules: path-based PartitionSpecs for params, optimizer state
 (ZeRO-1), batches, and decode states.
 
-Axes: 'pod' (outer DP, multi-pod only), 'data' (DP), 'model' (TP/EP).
+Axes: 'pod' (outer DP, multi-pod only), 'data' (DP), 'model' (TP/EP),
+'stage' (diagonal-as-pipeline slot sharding, DESIGN.md §6.2 — also the
+stacked per-layer dim of pattern params).
 Rules only annotate *arguments*; internal activations are propagated by
 GSPMD. Dims that do not divide the axis size fall back to replication —
-GSPMD stays correct and the roofline/HLO makes the cost visible (the §Perf
-hillclimb then fixes the ones that matter, e.g. qwen2.5's 40 heads).
+GSPMD stays correct, and each fallback emits one structured warning line
+(``repro.parallel.sharding`` logger, deduplicated) naming the leaf/dim so a
+sharding regression is visible in serve logs and benchmark output rather
+than silently costing replicated memory/compute (the §Perf hillclimb then
+fixes the ones that matter, e.g. qwen2.5's 40 heads).
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+import logging
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_log = logging.getLogger("repro.parallel.sharding")
+_warned: set = set()
+
+
+def _warn_replicated(kind: str, leaf: str, dim: int, size: int,
+                     axis: str, axis_size: int) -> None:
+    """One structured line per distinct fallback: a dim a rule *wanted* to
+    shard does not divide its mesh axis, so it is replicated instead."""
+    key = (kind, leaf, dim, size, axis, axis_size)
+    if key in _warned:
+        return
+    _warned.add(key)
+    _log.warning(
+        "sharding-fallback kind=%s leaf=%s dim=%d size=%d axis=%s "
+        "axis_size=%d -> replicated", kind, leaf, dim, size, axis, axis_size)
+
+
+def reset_fallback_warnings() -> None:
+    """Clear the warning dedup set (tests)."""
+    _warned.clear()
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -28,7 +55,11 @@ def tp_size(mesh: Mesh) -> int:
     return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
 
 
-def batch_axes(mesh: Mesh, batch: int):
+def stage_size(mesh: Mesh) -> int:
+    return int(mesh.shape["stage"]) if "stage" in mesh.axis_names else 1
+
+
+def batch_axes(mesh: Mesh, batch: int, *, leaf: str = ""):
     """Largest prefix of dp axes whose product divides the batch."""
     axes = []
     prod = 1
@@ -36,6 +67,12 @@ def batch_axes(mesh: Mesh, batch: int):
         if batch % (prod * mesh.shape[a]) == 0:
             axes.append(a)
             prod *= mesh.shape[a]
+    if batch > 1 and prod < dp_size(mesh):
+        # batch > 1 can't fill the dp axes — rows are (partially) replicated.
+        # batch == 1 (e.g. scheduler admission prefill) is by design, not a
+        # regression, so it stays quiet.
+        _warn_replicated("batch", leaf or "batch", 0, batch,
+                         "x".join(dp_axes(mesh)) or "data", dp_size(mesh))
     if not axes:
         return None
     return tuple(axes) if len(axes) > 1 else axes[0]
@@ -63,18 +100,28 @@ def param_leaf_spec(names, shape, tp: int) -> P:
     if tp <= 1:   # no 'model' axis in this mesh (e.g. pure stage meshes)
         return P(*([None] * len(shape)))
     last = names[-1]
+    leaf = ".".join(names)
     in_mem = "mem" in names
     in_moe = "moe" in names
     in_mixer = "mixer" in names
 
+    def fallback(dim: int) -> None:
+        _warn_replicated("param", leaf, dim, shape[dim], "model", tp)
+
     if last == "embed":
         if _div(shape[0], tp):
             return P("model", None)
-        return P(None, "model") if _div(shape[1], tp) else P(None, None)
+        if _div(shape[1], tp):
+            return P(None, "model")
+        fallback(0)
+        return P(None, None)
     if last == "head":
         if _div(shape[1], tp):
             return P(None, "model")
-        return P("model", None) if _div(shape[0], tp) else P(None, None)
+        if _div(shape[0], tp):
+            return P("model", None)
+        fallback(1)
+        return P(None, None)
     if last in ("mem_tokens", "pos_embed", "pos", "router"):
         return P(*([None] * len(shape)))
 
@@ -84,8 +131,14 @@ def param_leaf_spec(names, shape, tp: int) -> P:
             return P("model", None, None)          # expert parallelism
         # fall back: shard the FFN hidden dim
         if last in ("wg", "wu"):
-            return P(None, None, "model") if _div(shape[2], tp) else P(None, None, None)
-        return P(None, "model", None) if _div(shape[1], tp) else P(None, None, None)
+            if _div(shape[2], tp):
+                return P(None, None, "model")
+            fallback(2)
+            return P(None, None, None)
+        if _div(shape[1], tp):
+            return P(None, "model", None)
+        fallback(1)
+        return P(None, None, None)
 
     if in_mem:
         if last == "wv" and _div(shape[1], tp):
@@ -103,14 +156,21 @@ def param_leaf_spec(names, shape, tp: int) -> P:
         # verify divisibility on each sharded dim; else replicate
         for d, ax in enumerate(spec):
             if ax is not None and not _div(shape[d], tp):
+                fallback(d)
                 return P(*([None] * len(shape)))
         return spec
 
     # attention / dense FFN projections
     if last in ("wq", "wk", "wv", "wg", "wu", "wi"):   # column parallel
-        return P(None, "model") if _div(shape[1], tp) else P(None, None)
+        if _div(shape[1], tp):
+            return P(None, "model")
+        fallback(1)
+        return P(None, None)
     if last in ("wo", "wd"):                           # row parallel
-        return P("model", None) if _div(shape[0], tp) else P(None, None)
+        if _div(shape[0], tp):
+            return P("model", None)
+        fallback(0)
+        return P(None, None)
     return P(*([None] * len(shape)))                   # norms, biases, misc
 
 
@@ -136,6 +196,9 @@ def param_specs(params_shape: Any, mesh: Mesh, *, fsdp: bool = False,
         if stacked:
             ax = (stacked_axis if stacked_axis
                   and _div(leaf.shape[0], mesh.shape[stacked_axis]) else None)
+            if stacked_axis and ax is None:
+                _warn_replicated("param", ".".join(names), 0, leaf.shape[0],
+                                 stacked_axis, int(mesh.shape[stacked_axis]))
             spec = [ax] + spec
         if fsdp and dp:
             for d in range(len(leaf.shape)):
@@ -183,41 +246,91 @@ def batch_specs(mesh: Mesh, batch_shape: Any) -> Any:
     return jax.tree_util.tree_map(one, batch_shape)
 
 
-def decode_state_specs(state_shape: Any, mesh: Mesh, batch: int) -> Any:
-    """Shardings for decode state trees (k/v caches, A/z, ssm h/conv, pos)."""
+def decode_state_specs(state_shape: Any, mesh: Mesh, batch: int, *,
+                       stacked_axis: Optional[str] = None) -> Any:
+    """Shardings for decode state trees (k/v caches, A/z, ssm h/conv, pos).
+
+    Serving placement (DESIGN.md §10): the batch dim — the scheduler's decode
+    *slots* — shards over the DP axes, head/d_model-like dims over 'model',
+    tiny per-leaf remainders replicate (with a structured fallback warning).
+    ``pos`` may be a scalar (single-request decode, replicated) or an int32
+    [batch] per-slot vector (scheduler pools) which shards with the slots.
+
+    stacked_axis: shard the leading n_super dim of pattern leaves over this
+    mesh axis, mirroring ``param_specs(stacked_axis=...)`` so a stage-sharded
+    engine keeps each stage's recurrent state local to its own layers.
+    """
     tp = tp_size(mesh)
-    bax = batch_axes(mesh, batch)
 
     def one(path, leaf):
         names = _path_names(path)
         last = names[-1]
+        leaf_name = ".".join(names)
+        bax = batch_axes(mesh, batch, leaf=leaf_name)
         if last == "pos":
-            return NamedSharding(mesh, P())
+            # scalar: replicated; per-slot [batch] vector: sharded with slots
+            spec = [bax] if len(leaf.shape) == 1 else []
+            return NamedSharding(mesh, P(*spec))
         stacked = "pattern" in names
         shape = leaf.shape[1:] if stacked else leaf.shape
         if last in ("k", "v", "ck", "cv"):          # [B, S, kv, hd]
-            if _div(shape[2], tp):
+            if tp <= 1:   # no 'model' axis in this mesh (e.g. data,stage)
+                spec = [bax, None, None, None]
+            elif _div(shape[2], tp):
                 spec = [bax, None, "model", None]
-            else:
+            elif _div(shape[1], tp):
                 # kv heads don't divide TP: shard the *sequence* dim of the
                 # cache instead (a 32k cache replicated 16x would blow HBM)
-                spec = [bax, "model" if _div(shape[1], tp) else None,
-                        None, None]
-        elif last == "A":                           # [B, P, dv]
-            spec = [bax, None, "model" if _div(shape[2], tp) else None]
+                spec = [bax, "model", None, None]
+            else:
+                _warn_replicated("decode_state", leaf_name, 2, shape[2],
+                                 "model", tp)
+                spec = [bax, None, None, None]
+        elif last in ("A", "h", "conv"):
+            # model-dim placement of the recurrent leaves:
+            #   A [B, P, dv] dim 2 / h [B, dI, dS] dim 1 / conv [B, dc-1, dI]
+            #   dim 2 — replication here silently multiplies the serving
+            #   state the ARMT/SSM path depends on, so it warns like k/v
+            d = 1 if last == "h" else 2
+            spec = [bax] + [None] * (len(shape) - 1)
+            if tp > 1:
+                if _div(shape[d], tp):
+                    spec[d] = "model"
+                else:
+                    _warn_replicated("decode_state", leaf_name, d, shape[d],
+                                     "model", tp)
         elif last == "z":                           # [B, P]
             spec = [bax, None]
-        elif last == "h":                           # [B, dI, dS]
-            spec = [bax, "model" if _div(shape[1], tp) else None, None]
-        elif last == "conv":                        # [B, dc-1, dI]
-            spec = [bax, None, "model" if _div(shape[2], tp) else None]
         else:
             spec = [bax] + [None] * (len(shape) - 1)
         if stacked:
-            spec = [None] + spec
+            ax = (stacked_axis if stacked_axis
+                  and _div(leaf.shape[0], mesh.shape[stacked_axis]) else None)
+            if stacked_axis and ax is None:
+                _warn_replicated("decode_state", leaf_name, 0, leaf.shape[0],
+                                 stacked_axis, int(mesh.shape[stacked_axis]))
+            spec = [ax] + spec
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree_util.tree_map_with_path(one, state_shape)
+
+
+def slot_buf_spec(mesh: Mesh, n_layers: int, batch: int) -> Optional[P]:
+    """PartitionSpec for the diagonal executor's slot buffer [L, B, T, D]:
+    slots over 'stage' (diagonal-as-pipeline, DESIGN.md §6.2) and the batch
+    over the DP axes. Returns None when the mesh offers neither (the
+    constraint would be a no-op)."""
+    stage = None
+    if "stage" in mesh.axis_names:
+        if _div(n_layers, stage_size(mesh)):
+            stage = "stage"
+        else:
+            _warn_replicated("slot_buf", "buf", 0, n_layers, "stage",
+                             stage_size(mesh))
+    bax = batch_axes(mesh, batch, leaf="slot_buf")
+    if stage is None and bax is None:
+        return None
+    return P(stage, bax, None, None)
 
 
 def replicated(mesh: Mesh) -> NamedSharding:

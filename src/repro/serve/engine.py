@@ -26,11 +26,23 @@ only uncached tail segments are prefilled) and a `SessionStore` (multi-turn
 resume via `generate(..., session_id=...)` — O(new turn) instead of
 re-prefilling the conversation).
 
+The whole stack is *mesh-native* (DESIGN.md §10): `ServeEngine(mesh=...)`
+derives placement from `parallel/sharding.py` rules — params over 'model'
+(TP, stacked pattern optionally over 'stage'), the diagonal prefill's slot
+buffer pipeline-sharded via `slot_buf_spec`, decode state with batch/slots
+over the DP axes and heads/d_model over 'model' — and every jitted graph
+(`decode_step`, `flush_segment`, the whole-decode `lax.scan`, the
+scheduler's packed chunk/admission/extract) stays a single program with
+GSPMD inserting the collectives. State-store blobs cross the mesh boundary
+host-portable (gather-on-capture in the store, `_place_state`
+scatter-on-restore here), so snapshots resume across different mesh shapes.
+
 Multi-request continuous batching lives in `serve/scheduler.py`; the
 `ServeEngine.serve(requests)` iterator is the streaming front door.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass
 from typing import Dict, Iterable, Iterator, List, Optional
@@ -41,8 +53,11 @@ import numpy as np
 
 from repro.configs import ArchConfig
 from repro.core.memory import RECURRENT_KEYS
-from repro.models import (boundary_logits, decode_state_init, decode_step,
-                          flush_segment, forward_hidden, last_logits)
+from repro.core.schedule import StackLayout
+from repro.models import (boundary_logits, decode_state_init,
+                          decode_state_sharding, decode_step, flush_segment,
+                          forward_hidden, last_logits)
+from repro.parallel import sharding as shd
 
 
 def _transplant(fin: Dict, dstate: Dict) -> Dict:
@@ -99,13 +114,22 @@ class ServeEngine:
     (serve/state_store.py). The prefix cache needs serve_mode='armt' (its
     snapshots are the constant-size recurrent memory; a 'cache'-mode prefix
     would be the full KV tensor — exactly what the RMT lets us avoid).
+
+    mesh: optional `jax.sharding.Mesh` — the engine becomes mesh-native
+    (DESIGN.md §10): params are device_put to `parallel/sharding.py` specs
+    (TP over 'model', stacked pattern over 'stage' when present), decode
+    states to `decode_state_sharding` (batch/slots over DP axes), and the
+    diagonal prefill runs with `slot_buf_spec` pipeline sharding. All
+    decode/serve math is unchanged — GSPMD derives the collectives from the
+    argument placements, so sharded serving is token-identical (greedy) to
+    the single-device engine (tests/test_serve_sharded.py).
     """
 
     def __init__(self, params, cfg: ArchConfig, *, serve_mode: str = "armt",
                  schedule: str = "diagonal", max_len: int = 8192,
                  grouped_impl: Optional[str] = None,
                  prefix_cache=None, session_store=None,
-                 bucket_prompts: bool = True):
+                 bucket_prompts: bool = True, mesh=None):
         if serve_mode not in ("armt", "cache"):
             raise ValueError(f"unknown serve_mode {serve_mode!r}")
         if serve_mode == "armt" and cfg.armt is None and not cfg.is_recurrent:
@@ -117,7 +141,6 @@ class ServeEngine:
                 f"{cfg.name} has cfg.armt=None and non-SSM layers — pass "
                 "serve_mode='cache' for full-KV decoding or add an "
                 "ARMTConfig to the arch")
-        self.params = params
         self.cfg = cfg
         self.serve_mode = serve_mode
         self.schedule = schedule
@@ -143,6 +166,19 @@ class ServeEngine:
         self.prefix_cache = prefix_cache
         self.session_store = session_store
         self.bucket_prompts = bucket_prompts
+        self.mesh = mesh
+        self.stacked_axis = (
+            "stage" if mesh is not None and "stage" in mesh.axis_names
+            else None)
+        if mesh is not None:
+            # params committed to their TP/stage shardings once, up front —
+            # every jitted graph below then inherits the placement and GSPMD
+            # inserts the collectives (no per-call resharding)
+            pspecs = shd.param_specs(params, mesh,
+                                     stacked_axis=self.stacked_axis)
+            params = jax.device_put(params, pspecs)
+        self.params = params
+        self._n_layers = StackLayout.from_config(cfg).n_layers
         self._step = jax.jit(
             lambda p, s, t: decode_step(p, cfg, s, t, serve_mode=serve_mode))
         self._flush = jax.jit(
@@ -150,6 +186,60 @@ class ServeEngine:
         self._loops: Dict = {}    # (max_new, greedy, top_k) -> jitted loop
         self._sched_fns: Dict = {}   # chunk -> jitted scheduler fns (shared
         #                              across serve() calls / slot counts)
+
+    # ------------------------------------------------------------------
+    # Mesh placement (DESIGN.md §10) — no-ops on a mesh-less engine
+    # ------------------------------------------------------------------
+
+    def state_sharding(self, batch: int, *, per_slot_pos: bool = False):
+        """Decode-state NamedSharding tree for this engine's placement
+        rules; None without a mesh."""
+        if self.mesh is None:
+            return None
+        return decode_state_sharding(
+            self.cfg, self.mesh, batch, serve_mode=self.serve_mode,
+            max_len=self.max_len, dtype=self.params["embed"].dtype,
+            per_slot_pos=per_slot_pos,
+            stacked_axis=self.stacked_axis)
+
+    def _place_state(self, tree, batch: int):
+        """Scatter-on-restore: commit a decode/recurrent state tree (possibly
+        host numpy out of a mesh-agnostic store blob) to this engine's
+        shardings. The tree may be a sub-tree of a full decode state (e.g. a
+        boundary snapshot without pos/kv) — specs are derived from the tree
+        itself, so any {'prelude','pattern'} layout works.
+
+        Always a *fresh* buffer, never the store's own arrays — load-bearing:
+        on an exact full-prefix hit with no tail the transplanted leaves
+        reach the decode loop unmodified, and that loop donates its state;
+        without a fresh buffer, donation would delete the cache entry's
+        arrays out from under the store and the next hit on the same prefix
+        would transplant deleted arrays (GPU/TPU only; donation is skipped
+        on CPU, so CPU tests can't catch it)."""
+        if self.mesh is None:
+            return jax.tree_util.tree_map(lambda a: jnp.array(a, copy=True),
+                                          tree)
+        specs = shd.decode_state_specs(tree, self.mesh, batch,
+                                       stacked_axis=self.stacked_axis)
+
+        def one(a, s):
+            # device_put can alias the input's buffers when the placement
+            # already matches (including the zero-copy commit of an
+            # uncommitted array) — copy device arrays first so the result
+            # never shares storage with the store. Host numpy leaves skip
+            # the copy: device_put from host always allocates fresh device
+            # buffers.
+            if isinstance(a, jax.Array):
+                a = jnp.array(a, copy=True)
+            return jax.device_put(a, s)
+
+        return jax.tree_util.tree_map(one, tree, specs)
+
+    def _slot_spec(self, batch: int):
+        """Diagonal slot-buffer PartitionSpec for prefill on this mesh."""
+        if self.mesh is None or self.schedule != "diagonal":
+            return None
+        return shd.slot_buf_spec(self.mesh, self._n_layers, batch)
 
     def prefill(self, prompts: jax.Array, enc_frames=None):
         """prompts: [B, P]. Returns (next_token_logits, decode_state)."""
@@ -161,10 +251,16 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def _forward(self, toks, exec_state, enc_frames, capture: bool):
-        return forward_hidden(
-            self.params, self.cfg, toks, schedule=self.schedule,
-            enc_frames=enc_frames, grouped_impl=self.grouped_impl,
-            init_state=exec_state, capture_states=capture)
+        # the diagonal executor constrains its slot buffer with raw
+        # PartitionSpecs (core/diagonal.py), which resolve against the
+        # ambient mesh — enter it for the prefill forward
+        ctx = self.mesh if self.mesh is not None else contextlib.nullcontext()
+        with ctx:
+            return forward_hidden(
+                self.params, self.cfg, toks, schedule=self.schedule,
+                enc_frames=enc_frames, grouped_impl=self.grouped_impl,
+                slot_spec=self._slot_spec(toks.shape[0]),
+                init_state=exec_state, capture_states=capture)
 
     def _prefill(self, prompts: jax.Array, enc_frames=None):
         """prompts: [B, P]. Returns (next_token_logits, decode_state,
@@ -173,6 +269,8 @@ class ServeEngine:
         dtype = self.params["embed"].dtype
         dstate = decode_state_init(self.cfg, B, serve_mode=self.serve_mode,
                                    max_len=self.max_len, dtype=dtype)
+        if self.mesh is not None:
+            dstate = jax.device_put(dstate, self.state_sharding(B))
         n_full = P // self.seg_len if self.serve_mode == "armt" else 0
         logits = None
         cached = 0
@@ -190,9 +288,11 @@ class ServeEngine:
             chain = prefix_hash_chain(prompt_np, self.seg_len)
             cached, snap = self.prefix_cache.match(prompt_np, chain=chain)
             if cached:
-                exec_state = _snapshot_exec_state(snap.state)
+                exec_state = self._place_state(snap.state, B)
                 dstate = _transplant(exec_state, dstate)
-                logits = jnp.asarray(snap.logits)
+                logits = (jax.device_put(snap.logits, shd.replicated(self.mesh))
+                          if self.mesh is not None
+                          else jnp.asarray(snap.logits))
         rem = n_full - cached
         if rem > 0:
             groups = _pow2_chunks(rem) if self.bucket_prompts else [rem]
@@ -347,9 +447,13 @@ class ServeEngine:
         t0 = time.perf_counter()
         cached = 0
         if entry is not None:
-            dstate = {"prelude": entry.state["prelude"],
-                      "pattern": entry.state["pattern"],
-                      "pos": jnp.asarray(entry.pos, jnp.int32)}
+            # scatter-on-restore: session blobs are mesh-shape-agnostic
+            # (gathered to host by the store when sharded) — commit them to
+            # *this* engine's shardings, whatever mesh the blob came from
+            restored = self._place_state(
+                {"prelude": entry.state["prelude"],
+                 "pattern": entry.state["pattern"]}, 1)
+            dstate = {**restored, "pos": jnp.asarray(entry.pos, jnp.int32)}
             toks_in = np.concatenate(
                 [entry.pending, np.asarray(prompts[0], np.int32)])
             logits, dstate, _pos = self._chunk(
@@ -402,13 +506,3 @@ class ServeEngine:
         return sched.run(requests)
 
 
-def _snapshot_exec_state(state: Dict) -> Dict:
-    """Snapshot leaves may have crossed to host (numpy) via a store spill —
-    rebuild jnp leaves so the executor/jit sees uniform device arrays. The
-    copy is load-bearing: on an exact full-prefix hit with no tail the
-    transplanted leaves reach the decode loop *unmodified*, and that loop
-    donates its state — without a fresh buffer, donation would delete the
-    cache entry's arrays out from under the store and the next hit on the
-    same prefix would transplant deleted arrays (GPU/TPU only; donation is
-    skipped on CPU, so CPU tests can't catch it)."""
-    return jax.tree_util.tree_map(lambda a: jnp.array(a, copy=True), state)

@@ -28,6 +28,12 @@ sessions yield ``RequestError`` events on the stream — ``run`` never raises
 mid-serve for a bad request, so one malformed request cannot kill the other
 slots' in-flight generations.
 
+On a mesh-native engine (``ServeEngine(mesh=...)``, DESIGN.md §10) the pool
+and its per-slot control vectors are committed to the engine's decode-state
+shardings at construction — slot rows over the 'data' axes, heads/d_model
+over 'model' — and the packed chunk / admission / extract jits run as GSPMD
+programs over the mesh; the host driver below is unchanged.
+
 Slot-state invariants (DESIGN.md §8):
   * a slot row is meaningful iff its host-side `_Slot.active` is True; an
     inactive slot's row is garbage and is fully overwritten at admission
@@ -132,6 +138,21 @@ class ContinuousScheduler:
         self.tok = jnp.zeros((n_slots,), jnp.int32)      # pending next input
         self.active = jnp.zeros((n_slots,), bool)
         self.remaining = jnp.zeros((n_slots,), jnp.int32)
+        if engine.mesh is not None:
+            # mesh-native pool (DESIGN.md §10): slot rows shard over the DP
+            # axes, heads/d_model over 'model'; the per-slot control vectors
+            # (pending token / active / remaining) shard with the slots, so
+            # the packed chunk step is one GSPMD program over the mesh
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.parallel import sharding as shd
+            self.pool = jax.device_put(
+                self.pool, engine.state_sharding(n_slots, per_slot_pos=True))
+            vec = NamedSharding(
+                engine.mesh,
+                P(shd.batch_axes(engine.mesh, n_slots, leaf="slot_vec")))
+            self.tok = jax.device_put(self.tok, vec)
+            self.active = jax.device_put(self.active, vec)
+            self.remaining = jax.device_put(self.remaining, vec)
         self.slots = [_Slot() for _ in range(n_slots)]
         self.free: deque = deque(range(n_slots))
         # the jitted step/admit/extract functions are cached on the engine
@@ -186,10 +207,15 @@ class ContinuousScheduler:
         slot = self.free.popleft()
         if entry is not None:
             # O(new turn) resume: transplant the stored conversation state
-            # and feed only pending + this turn's tokens
-            dstate = {"prelude": entry.state["prelude"],
-                      "pattern": entry.state["pattern"],
-                      "pos": jnp.asarray(entry.pos, jnp.int32)}
+            # and feed only pending + this turn's tokens. _place_state is
+            # the scatter-on-restore boundary: blobs are mesh-shape-agnostic
+            # host arrays when they were captured sharded — commit them to
+            # this engine's shardings (a device_put, not a host round-trip,
+            # when they are already device-resident)
+            restored = self.engine._place_state(
+                {"prelude": entry.state["prelude"],
+                 "pattern": entry.state["pattern"]}, 1)
+            dstate = {**restored, "pos": jnp.asarray(entry.pos, jnp.int32)}
             toks_in = np.concatenate([entry.pending, prompt])
             logits, one_state, pos = self.engine._chunk(
                 dstate, jnp.asarray(toks_in[None]), entry.pos)

@@ -37,10 +37,16 @@ without spill, an evicted prefix is simply a future cache miss, while an
 evicted session becomes a tombstone — resuming it raises ``SessionEvicted``
 rather than silently serving a turn with amnesia.
 
-Snapshots are stored as whatever arrays the caller hands over (device
-arrays straight out of the jitted prefill/drain — nothing forces a
-device->host sync at capture time; byte accounting uses shape/dtype only).
-Arrays only cross to host when an entry is spilled to disk.
+Snapshots from a *single-device* engine are stored as whatever arrays the
+caller hands over (device arrays straight out of the jitted prefill/drain —
+nothing forces a device->host sync at capture time; byte accounting uses
+shape/dtype only). Arrays that are *sharded across devices* are gathered to
+host numpy at ``put`` time (``gather_to_host``) — the mesh-native serving
+boundary (DESIGN.md §10): stored blobs carry no mesh shape, so a snapshot
+captured on a 2x4 mesh restores on a single device and vice versa; the
+engine re-scatters restored leaves to its own decode-state shardings
+(scatter-on-restore). Single-device arrays additionally cross to host when
+an entry is spilled to disk.
 """
 from __future__ import annotations
 
@@ -53,7 +59,7 @@ import numpy as np
 
 __all__ = ["SegmentSnapshot", "SessionEntry", "SessionEvicted",
            "PrefixCache", "SessionStore", "prefix_hash_chain",
-           "tree_nbytes"]
+           "tree_nbytes", "gather_to_host"]
 
 
 def tree_nbytes(tree: Any) -> int:
@@ -62,6 +68,22 @@ def tree_nbytes(tree: Any) -> int:
     import jax
     return sum(int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
                for a in jax.tree_util.tree_leaves(tree))
+
+
+def gather_to_host(tree: Any) -> Any:
+    """Gather-on-capture boundary for mesh-native serving (DESIGN.md §10):
+    leaves sharded across more than one device become host numpy, so stored
+    blobs are mesh-shape-agnostic (a 2x4-mesh snapshot resumes on one device
+    and vice versa). Single-device leaves pass through untouched — the lazy
+    no-sync capture of §9 is preserved exactly where it existed."""
+    import jax
+
+    def one(a):
+        if isinstance(a, jax.Array) and len(a.sharding.device_set) > 1:
+            return np.asarray(a)
+        return a
+
+    return jax.tree_util.tree_map(one, tree)
 
 
 def prefix_hash_chain(tokens: np.ndarray, seg_len: int) -> List[bytes]:
@@ -188,6 +210,7 @@ class _ByteLRU:
         if old is not None and old.payload is not None:
             self.stats.bytes_in_ram -= old.nbytes
         self.tombstones.discard(key)
+        payload = gather_to_host(payload)   # mesh-shape-agnostic blobs (§10)
         nbytes = tree_nbytes(payload)
         self.entries[key] = _Slot(payload=payload, meta=meta, nbytes=nbytes)
         self.stats.bytes_in_ram += nbytes

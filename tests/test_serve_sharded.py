@@ -1,0 +1,246 @@
+"""Mesh-native serving (DESIGN.md §10) is *exact*: on 8 fake host devices,
+greedy `generate`, continuous `serve()`, and prefix-cache / session resume
+are token-identical to the single-device engine, and state-store blobs
+round-trip across different mesh shapes (snapshot on 2x4, resume on 1
+device, and the reverse).
+
+The mesh checks run in one subprocess (XLA_FLAGS must be set before jax
+imports) that prints one ``OK <name>`` marker per property; a timeout skips
+with a clear message (compiling GSPMD programs on 8 fake CPU devices can
+exceed constrained CI boxes — that is not a serving regression). The
+subprocess test is ``slow``-marked like its sibling in
+test_slot_sharding.py — the default tier-1 selection stays fast — and the
+CI workflow *gates* it in a dedicated sharded-serving step that selects
+``-m 'slow or not slow'``.
+
+The mesh-spec parser and the sharding-fallback warnings (satellites of the
+same PR) are plain single-device unit tests below.
+"""
+import logging
+import subprocess
+import sys
+
+import pytest
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import dataclasses
+import numpy as np
+import jax
+jax.config.update("jax_default_matmul_precision", "highest")
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serve import PrefixCache, Request, ServeEngine, SessionStore
+from repro.launch.mesh import parse_mesh
+
+# n_kv_heads=4 so kv heads divide model=4 (the smoke config's 2 would fall
+# back to cache-sequence sharding — legal, but this test wants real TP)
+cfg = dataclasses.replace(get_smoke_config("h2o-danube-1.8b"), n_kv_heads=4)
+params = init_params(cfg, jax.random.PRNGKey(0))
+seg = cfg.armt.segment_len
+rng = np.random.default_rng(7)
+MAXLEN, NEW = 256, 8
+
+ref_eng = ServeEngine(params, cfg, serve_mode="armt", max_len=MAXLEN)
+mesh = parse_mesh("data=2,model=4")
+eng = ServeEngine(params, cfg, serve_mode="armt", max_len=MAXLEN, mesh=mesh)
+
+# --- greedy generate: batch of 2, multi-segment prompt with tail ---------
+prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 2 * seg + 5), 8,
+                             cfg.vocab)
+ref = ref_eng.generate(prompts, 12).tokens
+assert (eng.generate(prompts, 12).tokens == ref).all()
+print("OK generate")
+
+# --- stage-sharded mesh: diagonal-as-pipeline prefill --------------------
+eng_stage = ServeEngine(params, cfg, serve_mode="armt", max_len=MAXLEN,
+                        mesh=parse_mesh("stage=2,model=4"))
+assert (eng_stage.generate(prompts, 12).tokens == ref).all()
+print("OK generate_stage")
+
+# --- continuous serve(): mixed lengths/phases, more requests than slots --
+reqs = [Request(req_id=f"r{i}",
+                prompt=rng.integers(8, cfg.vocab, (L,)).astype(np.int32),
+                max_new=5)
+        for i, L in enumerate([2 * seg, seg + 3, 7, seg - 1])]
+outs = {}
+for ev in eng.serve(reqs, n_slots=2, chunk=3):
+    outs.setdefault(ev.req_id, []).append(ev.token)
+for r in reqs:
+    want = ref_eng.generate(np.asarray(r.prompt)[None], 5).tokens[0]
+    assert outs[r.req_id] == want.tolist(), r.req_id
+print("OK serve")
+
+# --- prefix cache on the mesh: partial hit and full-prefix hit -----------
+cache = PrefixCache(seg, max_bytes=64 << 20)
+eng_pc = ServeEngine(params, cfg, serve_mode="armt", max_len=MAXLEN,
+                     mesh=mesh, prefix_cache=cache)
+sys_p = rng.integers(8, cfg.vocab, (2 * seg,)).astype(np.int32)
+p1 = np.concatenate([sys_p, rng.integers(8, cfg.vocab, (5,)).astype(np.int32)])
+r1 = eng_pc.generate(p1[None], NEW)            # cold: fills the cache
+r2 = eng_pc.generate(p1[None], NEW)            # partial-tail hit
+r3 = eng_pc.generate(sys_p[None], NEW)         # exact full-prefix hit
+assert r1.cached_segments == 0 and r2.cached_segments == 2 \
+    and r3.cached_segments == 2
+assert (r2.tokens == ref_eng.generate(p1[None], NEW).tokens).all()
+assert (r3.tokens == ref_eng.generate(sys_p[None], NEW).tokens).all()
+print("OK prefix_cache")
+
+# --- cross-mesh session restore: 2x4 -> 1 device and 1 device -> 2x4 -----
+t1 = rng.integers(8, cfg.vocab, (seg + 3,)).astype(np.int32)
+t2 = rng.integers(8, cfg.vocab, (seg // 2,)).astype(np.int32)
+store_ref = SessionStore(max_bytes=64 << 20)
+ref_s = ServeEngine(params, cfg, serve_mode="armt", max_len=MAXLEN,
+                    session_store=store_ref)
+b1 = ref_s.generate(t1[None], NEW, session_id="s")
+b2 = ref_s.generate(t2[None], NEW, session_id="s")
+
+store = SessionStore(max_bytes=64 << 20)
+m1 = ServeEngine(params, cfg, serve_mode="armt", max_len=MAXLEN, mesh=mesh,
+                 session_store=store)                 # capture on 2x4
+a1 = m1.generate(t1[None], NEW, session_id="s")
+d1 = ServeEngine(params, cfg, serve_mode="armt", max_len=MAXLEN,
+                 session_store=store)                 # resume on 1 device
+a2 = d1.generate(t2[None], NEW, session_id="s")
+assert (a1.tokens == b1.tokens).all()
+assert a2.resumed and (a2.tokens == b2.tokens).all()
+print("OK session_2x4_to_1dev")
+
+store2 = SessionStore(max_bytes=64 << 20)
+s1 = ServeEngine(params, cfg, serve_mode="armt", max_len=MAXLEN,
+                 session_store=store2)                # capture on 1 device
+c1 = s1.generate(t1[None], NEW, session_id="z")
+m2 = ServeEngine(params, cfg, serve_mode="armt", max_len=MAXLEN, mesh=mesh,
+                 session_store=store2)                # resume on 2x4
+c2 = m2.generate(t2[None], NEW, session_id="z")
+assert c2.resumed and (c2.tokens == b2.tokens).all()
+print("OK session_1dev_to_2x4")
+
+# --- scheduler sessions through the mesh engine --------------------------
+store3 = SessionStore(max_bytes=64 << 20)
+eng_s = ServeEngine(params, cfg, serve_mode="armt", max_len=MAXLEN,
+                    mesh=mesh, session_store=store3)
+outs = {}
+for ev in eng_s.serve([Request("q", t1, NEW, session_id="w")], n_slots=2,
+                      chunk=3):
+    outs.setdefault(ev.req_id, []).append(ev.token)
+for ev in eng_s.serve([Request("q2", t2, NEW, session_id="w")], n_slots=2,
+                      chunk=3):
+    outs.setdefault(ev.req_id, []).append(ev.token)
+assert outs["q"] == b1.tokens[0].tolist()
+assert outs["q2"] == b2.tokens[0].tolist()
+print("OK scheduler_sessions")
+"""
+
+_MARKERS = ("generate", "generate_stage", "serve", "prefix_cache",
+            "session_2x4_to_1dev", "session_1dev_to_2x4",
+            "scheduler_sessions")
+
+
+@pytest.mark.slow
+def test_sharded_serving_token_identical():
+    try:
+        r = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                           capture_output=True, text=True, timeout=600,
+                           env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                "HOME": "/root"})
+    except subprocess.TimeoutExpired:
+        pytest.skip("sharded-serve subprocess exceeded 600s: environment "
+                    "too constrained to compile the 8-fake-device GSPMD "
+                    "programs — exactness is asserted whenever the compile "
+                    "finishes (CI runs this as a dedicated step)")
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-2000:])
+    for m in _MARKERS:
+        assert f"OK {m}" in r.stdout, (m, r.stdout[-1000:])
+
+
+# ---------------------------------------------------------------------------
+# Single-device satellites: mesh-spec parsing + fallback warnings
+# ---------------------------------------------------------------------------
+
+def test_parse_mesh_specs():
+    import jax
+    from repro.launch.mesh import parse_mesh
+    dev = jax.devices()
+    m = parse_mesh("data=1,model=1", devices=dev[:1])
+    assert dict(m.shape) == {"data": 1, "model": 1}
+    m = parse_mesh("data,model=1", devices=dev[:1])   # open axis absorbs
+    assert dict(m.shape) == {"data": 1, "model": 1}
+    with pytest.raises(ValueError, match="unknown mesh axis"):
+        parse_mesh("banana=2", devices=dev[:1])
+    with pytest.raises(ValueError, match="at most one axis"):
+        parse_mesh("data,model", devices=dev[:1])
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_mesh("data=1,data=1", devices=dev[:1])
+    with pytest.raises(ValueError, match="device"):
+        parse_mesh("data=64,model=2", devices=dev[:1])
+    # underfill is an error, not a silent subset (device_count provenance)
+    with pytest.raises(ValueError, match="open axis"):
+        parse_mesh("data=1", devices=dev[:1] * 2)
+    with pytest.raises(ValueError, match=">= 1"):
+        parse_mesh("data=0", devices=dev[:1])
+    with pytest.raises(ValueError, match="empty"):
+        parse_mesh(" , ", devices=dev[:1])
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+def test_sharding_fallback_warnings(caplog):
+    """A dim a rule wanted to shard that does not divide its axis emits one
+    structured warning line naming the leaf/dim (and only one — deduped)."""
+    from repro.parallel import sharding as shd
+    shd.reset_fallback_warnings()
+    with caplog.at_level(logging.WARNING, logger="repro.parallel.sharding"):
+        spec = shd.param_leaf_spec(["pattern", "attn", "wq"], (30, 30), 16)
+    assert spec == shd.P(None, None)
+    recs = [r for r in caplog.records if "sharding-fallback" in r.getMessage()]
+    assert len(recs) == 1
+    msg = recs[0].getMessage()
+    assert "leaf=pattern.attn.wq" in msg and "dim=1" in msg \
+        and "axis=model" in msg and "axis_size=16" in msg
+    # dedup: the same fallback does not log twice
+    with caplog.at_level(logging.WARNING, logger="repro.parallel.sharding"):
+        shd.param_leaf_spec(["pattern", "attn", "wq"], (30, 30), 16)
+    recs = [r for r in caplog.records if "sharding-fallback" in r.getMessage()]
+    assert len(recs) == 1
+
+
+def test_batch_axes_warning_only_above_one(caplog):
+    """batch=1 replication (scheduler admission) is by design and silent;
+    batch>1 that can't fill the dp axes warns."""
+    from repro.parallel import sharding as shd
+    shd.reset_fallback_warnings()
+    mesh = _FakeMesh({"data": 4, "model": 2})
+    with caplog.at_level(logging.WARNING, logger="repro.parallel.sharding"):
+        assert shd.batch_axes(mesh, 1, leaf="admission") is None
+    assert not [r for r in caplog.records
+                if "sharding-fallback" in r.getMessage()]
+    with caplog.at_level(logging.WARNING, logger="repro.parallel.sharding"):
+        assert shd.batch_axes(mesh, 3, leaf="pool") is None
+    recs = [r for r in caplog.records if "sharding-fallback" in r.getMessage()]
+    assert len(recs) == 1 and "leaf=pool" in recs[0].getMessage()
+
+
+def test_decode_state_specs_per_slot_pos():
+    """The per-slot pos vector shards with the slots; a scalar pos stays
+    replicated (spec derivation, no devices needed)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.models import decode_state_shapes
+    from repro.parallel import sharding as shd
+
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for per_slot, want in ((True, P("data")), (False, P())):
+        shapes = decode_state_shapes(cfg, 4, serve_mode="armt", max_len=64,
+                                     dtype=jnp.float32, per_slot_pos=per_slot)
+        specs = shd.decode_state_specs(shapes, mesh, 4)
+        assert specs["pos"].spec == want, (per_slot, specs["pos"].spec)
