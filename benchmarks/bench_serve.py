@@ -10,6 +10,18 @@ per-request completion latency. A one-request-at-a-time `generate` pass
 over the identical set is the no-continuous-batching baseline. A warmup
 pass absorbs compilation so the numbers measure the steady state.
 
+Every scheduler record also carries inter-token-latency percentiles
+(``itl_s_p50``/``itl_s_p99``, pooled per-request gaps between StreamEvent
+``t_emit`` stamps) and ``admission_stall_s`` — the max decode gap whose
+interval overlaps an admission window, i.e. the head-of-line stall an
+admission inflicts on already-decoding slots.
+
+A ``mixed_workload`` scenario (DESIGN.md §11) drops long-prompt admissions
+into a steadily decoding pool and runs the SAME request set in both
+admission modes — blocking (``prefill_groups_per_chunk=0``, the legacy
+path) and interleaved (the default resumable-pipeline path) — recording
+the stall reduction at equal total throughput.
+
 Two state-store workloads (serve/state_store.py):
   * shared_prefix — N requests sharing a multi-segment system prompt;
     cold admission (PR 2 path: full diagonal prefill per request) vs a
@@ -65,18 +77,55 @@ def _requests(cfg, n, max_new, seed=0):
             for i, L in enumerate(lens)]
 
 
-def _drive(eng, reqs, n_slots, chunk):
+def _itl_stats(emit_times):
+    """Per-request inter-token latencies, pooled -> (p50, p99). Events
+    surface at chunk boundaries, so ITLs inside one chunk are ~0 and the
+    tail percentiles expose chunk gaps and admission stalls."""
+    itls = []
+    for times in emit_times.values():
+        itls += [b - a for a, b in zip(times, times[1:])]
+    if not itls:
+        return 0.0, 0.0
+    return (float(np.percentile(itls, 50)), float(np.percentile(itls, 99)))
+
+
+def _admission_stall(windows, emit_times):
+    """Max decode gap (between consecutive stream-event host timestamps,
+    any request) whose interval overlaps an admission window — the
+    head-of-line stall a blocking admission inflicts on already-decoding
+    slots. 0.0 when no admission overlapped active decode (e.g. the cold
+    fill of an empty pool)."""
+    times = sorted({t for ts in emit_times.values() for t in ts})
+    gaps = [(a, b) for a, b in zip(times, times[1:])]
+    stall = 0.0
+    for (w0, w1) in windows:
+        for (a, b) in gaps:
+            if a <= w1 and b >= w0:
+                stall = max(stall, b - a)
+    return stall
+
+
+def _drive(eng, reqs, n_slots, chunk, *, groups_per_chunk=4, fused=False):
     # per-request timings come from the stream's own metrics (StreamEvent
-    # ttft_s / tok_s) — the bench no longer re-derives them externally
+    # ttft_s / tok_s / t_emit) — the bench no longer re-derives them
+    # externally; the scheduler is built directly so its admission windows
+    # are readable afterwards
+    from repro.serve.scheduler import ContinuousScheduler
+    sched = ContinuousScheduler(eng, n_slots=n_slots, chunk=chunk,
+                                prefill_groups_per_chunk=groups_per_chunk,
+                                fused_admission=fused)
     t0 = time.perf_counter()
     ttft, tok_s, done_at, n_tok = {}, {}, {}, 0
-    for ev in eng.serve(reqs, n_slots=n_slots, chunk=chunk):
+    emit_times = {}
+    for ev in sched.run(iter(reqs)):
         n_tok += 1
+        emit_times.setdefault(ev.req_id, []).append(ev.t_emit)
         if ev.done:
             ttft[ev.req_id] = ev.ttft_s
             tok_s[ev.req_id] = ev.tok_s
             done_at[ev.req_id] = time.perf_counter() - t0
     wall = time.perf_counter() - t0
+    itl_p50, itl_p99 = _itl_stats(emit_times)
     return {
         "wall_s": wall,
         "throughput_tok_s": n_tok / wall,
@@ -85,6 +134,10 @@ def _drive(eng, reqs, n_slots, chunk):
         "request_tok_s_mean": float(np.mean(list(tok_s.values()))),
         "latency_s_mean": float(np.mean(list(done_at.values()))),
         "latency_s_max": float(np.max(list(done_at.values()))),
+        "itl_s_p50": itl_p50,
+        "itl_s_p99": itl_p99,
+        "admission_stall_s": _admission_stall(sched.admission_windows,
+                                              emit_times),
     }
 
 
@@ -187,6 +240,124 @@ def _bench_multi_turn(cfg, params, quick: bool):
     return rec
 
 
+def _bench_mixed_workload(cfg, params, quick: bool):
+    """Long-prompt admissions landing mid-steady-decode (DESIGN.md §11,
+    EXPERIMENTS.md §Interleaved-prefill): a pool of steady decoders is
+    running when long-prompt requests arrive; blocking admission
+    (prefill_groups_per_chunk=0, the PR 2 path) freezes every stream for
+    the whole prefill, interleaved admission (the default) advances the
+    prefill a few diagonal groups per chunk. Same request set, both modes;
+    the headline is ``admission_stall_s`` (max decode gap overlapping an
+    admission) at equal total throughput."""
+    # its own engine/model: a slightly bigger stack and segment length than
+    # the throughput trajectory's smoke config, so per-group prefill
+    # compute dominates per-dispatch overhead and the stall numbers measure
+    # scheduling, not jax dispatch latency
+    seg_mix = 64
+    mix_cfg = dataclasses.replace(
+        cfg, n_layers=6, d_model=128, n_heads=8, n_kv_heads=8, d_head=16,
+        d_ff=384,
+        armt=ARMTConfig(segment_len=seg_mix, num_mem_tokens=8, d_mem=8))
+    mix_params = init_params(mix_cfg, jax.random.PRNGKey(2))
+    # 32 segments = one pow2 bucket, so the blocking baseline's stall is
+    # the whole prefill (a multi-stage prompt would cap it at the largest
+    # stage); the steady phase is long enough that both admissions land
+    # and finish while the other slots are mid-decode
+    n_long_seg = 32 if quick else 64
+    steady_new = 384 if quick else 512
+    short_new = 12
+    n_slots, chunk = 4, 8
+    reps = 3                     # best-of-3 for stall/wall/throughput,
+    #                              median elsewhere (see below) — host-clock
+    #                              numbers on shared CI boxes are noisy, so
+    #                              one record may mix values from different
+    #                              runs (throughput != n_tok/wall_s)
+    eng = ServeEngine(mix_params, mix_cfg, serve_mode="armt",
+                      max_len=2 * seg_mix + steady_new)
+
+    def reqs():
+        rng = np.random.default_rng(11)
+        steady = [Request(f"s{i}",
+                          rng.integers(8, mix_cfg.vocab,
+                                       (2 * seg_mix,)).astype(np.int32),
+                          steady_new if i < n_slots - 1 else short_new)
+                  for i in range(n_slots)]
+        # the short steady request frees its slot early, so the long
+        # admissions land while the other slots are mid-decode
+        longs = [Request(f"L{i}",
+                         rng.integers(8, mix_cfg.vocab,
+                                      (n_long_seg * seg_mix,)).astype(np.int32),
+                         short_new)
+                 for i in range(2)]
+        return steady + longs
+
+    # four admission modes over the SAME request set:
+    #   legacy_blocking (k=0)  — the PR 2 path (eager _prefill per
+    #     admission; at smoke scale its wall is dominated by per-admission
+    #     retracing, recorded for coverage, not the headline baseline);
+    #   blocking (k=-1)        — whole diagonal stage per advance through
+    #     the jitted stepper: blocking head-of-line semantics at equal
+    #     total work, the fair baseline for the stall claim;
+    #   interleaved (k=4)      — the default resumable pipeline;
+    #   fused (k=4)            — admission groups inside the decode
+    #     chunk's launch (one dispatch per interval).
+    rec = {"n_slots": n_slots, "chunk": chunk, "segment_len": seg_mix,
+           "long_prompt_segments": n_long_seg, "steady_max_new": steady_new,
+           "model": {"n_layers": mix_cfg.n_layers,
+                     "d_model": mix_cfg.d_model, "d_ff": mix_cfg.d_ff}}
+    modes = (("legacy_blocking", 0, False), ("blocking", -1, False),
+             ("interleaved", 4, False), ("fused", 4, True))
+    for name, k, fused in modes:                                   # warmup
+        _drive(eng, reqs(), n_slots, chunk, groups_per_chunk=k, fused=fused)
+    # round-robin the repetitions across modes (A/B/C, A/B/C, ...) so a
+    # drifting host load hits every mode's samples equally instead of
+    # biasing whichever mode happened to run during a slow phase
+    runs = {name: [] for name, _, _ in modes}
+    for rep in range(reps):
+        for name, k, fused in modes:
+            if name == "legacy_blocking" and rep > 0:
+                continue                     # coverage row: one rep is enough
+            runs[name].append(_drive(eng, reqs(), n_slots, chunk,
+                                     groups_per_chunk=k, fused=fused))
+    for name, k, fused in modes:
+        # best-of-N per metric: host noise strictly *inflates* a max-gap
+        # (admission_stall is the max inter-event gap) and strictly
+        # *deflates* throughput, so min/max isolate the intrinsic
+        # scheduling behavior from box hiccups; everything else is median
+        best = {"admission_stall_s": min, "wall_s": min,
+                "throughput_tok_s": max}
+        rec[name] = {kk: float(best.get(kk, np.median)(
+            [r[kk] for r in runs[name]])) for kk in runs[name][0]}
+        rec[name]["reps"] = len(runs[name])
+        rec[name]["prefill_groups_per_chunk"] = k
+        rec[name]["fused_admission"] = fused
+    # the headline ratios pair each rep's interleaved/fused sample with the
+    # *temporally adjacent* blocking sample of the same round-robin round
+    # and take the median of the per-rep ratios — the host (a cgroup-shared
+    # box) drifts 2-3x over minutes, which cancels within a round but not
+    # across per-mode aggregates
+    def paired(metric, num, den):
+        return float(np.median([runs[num][i][metric] / runs[den][i][metric]
+                                for i in range(reps)]))
+
+    rec["stall_reduction_x"] = paired("admission_stall_s",
+                                      "blocking", "interleaved")
+    rec["stall_reduction_fused_x"] = paired("admission_stall_s",
+                                            "blocking", "fused")
+    rec["throughput_ratio"] = paired("throughput_tok_s",
+                                     "interleaved", "blocking")
+    rec["throughput_ratio_fused"] = paired("throughput_tok_s",
+                                           "fused", "blocking")
+    blk, itl = rec["blocking"], rec["interleaved"]
+    row("serve_mixed_workload", itl["admission_stall_s"],
+        f"stall blocking={blk['admission_stall_s']:.3f}s "
+        f"interleaved={itl['admission_stall_s']:.3f}s "
+        f"({rec['stall_reduction_x']:.1f}x, "
+        f"fused {rec['stall_reduction_fused_x']:.1f}x) "
+        f"tput ratio={rec['throughput_ratio']:.2f}")
+    return rec
+
+
 def bench_serve(quick: bool = True, out_path: str | None = None,
                 mesh_spec: str | None = None):
     cfg = _config()
@@ -258,6 +429,9 @@ def bench_serve(quick: bool = True, out_path: str | None = None,
     # tests/test_serve_sharded.py
     shared_prefix = _bench_shared_prefix(cfg, params, quick)
     multi_turn = _bench_multi_turn(cfg, params, quick)
+    # interleaved vs blocking admission under steady decode — runs BOTH
+    # modes so the legacy blocking path stays covered in CI
+    mixed_workload = _bench_mixed_workload(cfg, params, quick)
 
     # own env var — sharing BENCH_OUT with bench_diagonal would make the two
     # benches overwrite each other's artifact under benchmarks.run
@@ -279,6 +453,7 @@ def bench_serve(quick: bool = True, out_path: str | None = None,
         "mesh_results": mesh_results,
         "shared_prefix": shared_prefix,
         "multi_turn": multi_turn,
+        "mixed_workload": mixed_workload,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)

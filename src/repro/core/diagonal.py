@@ -11,6 +11,19 @@ then the buffer shifts down one slot.
 S + L - 1 steps total (minimal, Lemma 3.1); recurrence is exact: per-layer
 states are updated by the same functions in the same order as the sequential
 executor, only grouped across slots.
+
+Two drivers share one anti-diagonal step body (``_diag_body``):
+
+  * ``run_diagonal`` — the one-shot executor: a single ``lax.scan`` over all
+    S + L - 1 groups (training / blocking prefill).
+  * ``pipeline_init`` / ``pipeline_step`` / ``pipeline_finalize`` — the
+    *resumable* pipeline (DESIGN.md §11): the carry (slot buffer, executor
+    state, group cursor, per-segment output buffer, optional recurrent-state
+    capture) is explicit, and each ``pipeline_step`` call advances a bounded
+    number of groups, so a long prefill can be suspended between calls —
+    e.g. to let decode chunks run (serve/scheduler.py) — and resumed
+    bit-exactly. Sharing the step body is what makes the two drivers
+    token-identical by construction.
 """
 from __future__ import annotations
 
@@ -61,61 +74,29 @@ def boundary_states_from_capture(layout: StackLayout, captured: Dict,
     return {"prelude": prelude, "pattern": tuple(pattern)}
 
 
-def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
-                 segments: jax.Array, apply_block: ApplyBlock,
-                 *, remat: bool = False, buf_spec=None, grouped_apply=None,
-                 capture_states: bool = False):
-    """segments: [S, B, T, D] -> (ys [S, B, T, D], final_state).
+def _spec_axes(buf_spec):
+    slot_axis = buf_spec[0] if buf_spec is not None else None
+    batch_axis = (buf_spec[1] if buf_spec is not None and len(buf_spec) > 1
+                  else None)
+    return slot_axis, batch_axis
 
-    Same params/state structure as run_sequential — the two executors are
-    interchangeable (that is the point of the paper: pure reordering).
 
-    buf_spec: optional PartitionSpec for the slot buffer [L, B, T, D]. With
-    the slot dim sharded over a mesh axis ('stage'), diagonal batching
-    *becomes pipeline parallelism*: every stage applies its own layers with
-    fully local weights and the shift lowers to one collective-permute per
-    step — no per-layer tensor-parallel all-reduces (EXPERIMENTS.md §Perf).
-
-    grouped_apply: optional fused grouped-block application
-    ``(btype, stacked_params [n_super, ...], x [n_super, B, T, D],
-    stacked_state) -> (y, new_state)`` replacing the default
-    ``jax.vmap(apply_block)`` over each pattern position — the fast mode
-    built by ``models.grouped_blocks.make_grouped_apply`` that launches the
-    Pallas grouped kernels (grouped GEMM / batched flash attention / fused
-    ARMT memory) over the whole group (EXPERIMENTS.md §Perf).
-
-    capture_states: also return the per-step recurrent state (A/z/h/conv)
-    of every layer as a third output with leading axis [S+L-1] — the raw
-    material for segment-boundary snapshots (boundary_states_from_capture,
-    serve/state_store.py). Constant-size per step, so the extra scan output
-    is (S+L-1) x the recurrent-state footprint, not activations.
-    """
-    S = segments.shape[0]
-    L = layout.n_layers
-    P = len(layout.pattern)
-    n_steps = S + L - 1
-    n_pre = len(layout.prelude)
-
-    pad = jnp.zeros((L - 1,) + segments.shape[1:], segments.dtype)
-    xs_seg = jnp.concatenate([segments, pad], axis=0) if L > 1 else segments
-    slot_ids = jnp.arange(L)
-
-    pos_slots = [np.asarray(layout.position_slots(p)) for p in range(P)]
-
+def _constrain_fn(buf_spec):
     def _constrain(b):
         if buf_spec is not None:
             return jax.lax.with_sharding_constraint(b, buf_spec)
         return b
+    return _constrain
 
-    slot_axis = buf_spec[0] if buf_spec is not None else None
-    batch_axis = (buf_spec[1] if buf_spec is not None and len(buf_spec) > 1
-                  else None)
+
+def _constrain_states_fn(buf_spec):
+    """Pin per-layer recurrent state (A/z/h/conv) to the slot sharding —
+    otherwise GSPMD re-gathers the stage-sharded activations every step.
+    State layout is [n_super, B, ...]: slot axis on dim 0, the buffer's
+    batch axis on dim 1."""
+    slot_axis, batch_axis = _spec_axes(buf_spec)
 
     def _constrain_states(pattern_states):
-        """Pin per-layer recurrent state (A/z/h/conv) to the slot sharding —
-        otherwise GSPMD re-gathers the stage-sharded activations every step.
-        State layout is [n_super, B, ...]: slot axis on dim 0, the buffer's
-        batch axis on dim 1."""
         if slot_axis is None:
             return pattern_states
         from jax.sharding import PartitionSpec as PS
@@ -127,6 +108,31 @@ def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
             return jax.lax.with_sharding_constraint(
                 leaf, PS(slot_axis, *rest))
         return tuple(jax.tree_util.tree_map(one, st) for st in pattern_states)
+
+    return _constrain_states
+
+
+def _diag_body(layout: StackLayout, params: Dict, apply_block: ApplyBlock,
+               n_segments: int, *, buf_spec=None, grouped_apply=None,
+               capture_states: bool = False):
+    """One anti-diagonal group as a pure step function
+
+        body((buf, states), (seg_in, i)) -> ((buf_next, states_next), emit)
+
+    shared — the same closure, hence the same math in the same order — by
+    the one-shot scan executor (run_diagonal) and the resumable pipeline
+    stepper (pipeline_step). ``emit`` is the drained slot's output (plus
+    the per-step recurrent-state capture when capture_states). Groups with
+    ``i`` outside [0, S+L-2] are masked no-ops on the executor state: every
+    slot is invalid, so states freeze and only the (ignored) buffer churns.
+    """
+    S = n_segments
+    L = layout.n_layers
+    P = len(layout.pattern)
+    slot_ids = jnp.arange(L)
+    pos_slots = [np.asarray(layout.position_slots(p)) for p in range(P)]
+    _constrain = _constrain_fn(buf_spec)
+    _constrain_states = _constrain_states_fn(buf_spec)
 
     def diag_step(carry, xs):
         buf, states = carry
@@ -194,8 +200,52 @@ def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
                 else out)
         return (buf_next, new_states), emit
 
-    step_fn = jax.checkpoint(diag_step) if remat else diag_step
+    return diag_step
 
+
+def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
+                 segments: jax.Array, apply_block: ApplyBlock,
+                 *, remat: bool = False, buf_spec=None, grouped_apply=None,
+                 capture_states: bool = False):
+    """segments: [S, B, T, D] -> (ys [S, B, T, D], final_state).
+
+    Same params/state structure as run_sequential — the two executors are
+    interchangeable (that is the point of the paper: pure reordering).
+
+    buf_spec: optional PartitionSpec for the slot buffer [L, B, T, D]. With
+    the slot dim sharded over a mesh axis ('stage'), diagonal batching
+    *becomes pipeline parallelism*: every stage applies its own layers with
+    fully local weights and the shift lowers to one collective-permute per
+    step — no per-layer tensor-parallel all-reduces (EXPERIMENTS.md §Perf).
+
+    grouped_apply: optional fused grouped-block application
+    ``(btype, stacked_params [n_super, ...], x [n_super, B, T, D],
+    stacked_state) -> (y, new_state)`` replacing the default
+    ``jax.vmap(apply_block)`` over each pattern position — the fast mode
+    built by ``models.grouped_blocks.make_grouped_apply`` that launches the
+    Pallas grouped kernels (grouped GEMM / batched flash attention / fused
+    ARMT memory) over the whole group (EXPERIMENTS.md §Perf).
+
+    capture_states: also return the per-step recurrent state (A/z/h/conv)
+    of every layer as a third output with leading axis [S+L-1] — the raw
+    material for segment-boundary snapshots (boundary_states_from_capture,
+    serve/state_store.py). Constant-size per step, so the extra scan output
+    is (S+L-1) x the recurrent-state footprint, not activations.
+    """
+    S = segments.shape[0]
+    L = layout.n_layers
+    n_steps = S + L - 1
+
+    pad = jnp.zeros((L - 1,) + segments.shape[1:], segments.dtype)
+    xs_seg = jnp.concatenate([segments, pad], axis=0) if L > 1 else segments
+
+    body = _diag_body(layout, params, apply_block, S, buf_spec=buf_spec,
+                      grouped_apply=grouped_apply,
+                      capture_states=capture_states)
+    step_fn = jax.checkpoint(body) if remat else body
+
+    _constrain = _constrain_fn(buf_spec)
+    _constrain_states = _constrain_states_fn(buf_spec)
     buf0 = _constrain(jnp.zeros((L,) + segments.shape[1:], segments.dtype))
     state0 = dict(state0,
                   pattern=_constrain_states(tuple(state0["pattern"])))
@@ -205,3 +255,115 @@ def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
         ys, captured = emitted
         return ys[L - 1:], final_state, captured
     return emitted[L - 1:], final_state
+
+
+# ---------------------------------------------------------------------------
+# Resumable pipeline (interleaved chunked prefill, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def pipeline_init(layout: StackLayout, state0: Dict, segments: jax.Array,
+                  *, capture_states: bool = False):
+    """Build ``(xs, carry)`` for a resumable diagonal prefill over
+    ``segments [S, B, T, D]``.
+
+    The carry is everything a suspended pipeline needs to resume bit-exactly:
+
+      * ``buf``   [L, B, T, D] — the slot buffer;
+      * ``state`` — the per-layer executor state tree;
+      * ``step``  — int32 group cursor (fill/drain position; see
+        core.schedule.segments_completed / segments_entered);
+      * ``ys``    [S, B, T, D] — per-segment outputs, written as each
+        segment drains from slot L-1;
+      * ``cap``   (only with capture_states) — the per-group recurrent-state
+        capture, leading axis [S+L-1], same layout the one-shot executor
+        emits (so ``boundary_states_from_capture`` applies unchanged).
+
+    ``xs`` is the drain-padded segment input [S+L-1, B, T, D]; it is
+    read-only, passed alongside the carry on every ``pipeline_step`` call
+    and never donated.
+    """
+    S = segments.shape[0]
+    L = layout.n_layers
+    pad = jnp.zeros((L - 1,) + segments.shape[1:], segments.dtype)
+    xs = jnp.concatenate([segments, pad], axis=0) if L > 1 else segments
+    carry = {
+        "buf": jnp.zeros((L,) + segments.shape[1:], segments.dtype),
+        "state": state0,
+        "step": jnp.zeros((), jnp.int32),
+        "ys": jnp.zeros_like(segments),
+    }
+    if capture_states:
+        n_steps = S + L - 1
+        carry["cap"] = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((n_steps,) + a.shape, a.dtype),
+            recurrent_state(state0))
+    return xs, carry
+
+
+def pipeline_step(layout: StackLayout, params: Dict, xs: jax.Array,
+                  carry: Dict, apply_block: ApplyBlock, *, n_groups: int = 1,
+                  buf_spec=None, grouped_apply=None) -> Dict:
+    """Advance a suspended pipeline by ``n_groups`` anti-diagonal groups.
+
+    Pure ``(params, xs, carry) -> carry`` — jit (and donate the carry) at
+    the caller; serve/engine.py's ``prefill_step`` does. Uses the same step
+    body as ``run_diagonal``, so interleaving pipeline calls with anything
+    else cannot change the result. Groups past the end of the grid are
+    masked no-ops: the validity mask freezes the executor state and no
+    ``ys``/``cap`` slot is written, so overshooting the final group (the
+    last fixed-size call of a grid whose S+L-1 is not a multiple of
+    n_groups) is safe — compile count stays one program per (S, n_groups).
+    """
+    S = carry["ys"].shape[0]
+    L = layout.n_layers
+    n_steps = S + L - 1
+    capture = "cap" in carry
+    body = _diag_body(layout, params, apply_block, S, buf_spec=buf_spec,
+                      grouped_apply=grouped_apply, capture_states=capture)
+    _constrain_states = _constrain_states_fn(buf_spec)
+    carry = dict(carry, state=dict(
+        carry["state"],
+        pattern=_constrain_states(tuple(carry["state"]["pattern"]))))
+
+    def sub(c, _):
+        i = c["step"]
+        seg_in = jax.lax.dynamic_index_in_dim(
+            xs, jnp.minimum(i, xs.shape[0] - 1), 0, keepdims=False)
+        (buf, states), emit = body((c["buf"], c["state"]), (seg_in, i))
+        out, cap_e = emit if capture else (emit, None)
+        # segment i-(L-1) drained this group: write it into ys (guarded —
+        # fill steps and overshoot steps write nothing)
+        idx = i - (L - 1)
+        ok = (idx >= 0) & (idx < S)
+        ci = jnp.clip(idx, 0, S - 1)
+        cur = jax.lax.dynamic_index_in_dim(c["ys"], ci, 0, keepdims=False)
+        ys = jax.lax.dynamic_update_index_in_dim(
+            c["ys"], jnp.where(ok, out.astype(c["ys"].dtype), cur), ci, 0)
+        new = dict(c, buf=buf, state=states, step=i + 1, ys=ys)
+        if capture:
+            si = jnp.minimum(i, n_steps - 1)
+            sok = i < n_steps
+
+            def wr(b, e):
+                old = jax.lax.dynamic_index_in_dim(b, si, 0, keepdims=False)
+                return jax.lax.dynamic_update_index_in_dim(
+                    b, jnp.where(sok, e.astype(b.dtype), old), si, 0)
+
+            new["cap"] = jax.tree_util.tree_map(wr, c["cap"], cap_e)
+        return new, None
+
+    carry, _ = jax.lax.scan(sub, carry, None, length=n_groups)
+    return carry
+
+
+def pipeline_finalize(layout: StackLayout, carry: Dict):
+    """Unpack a *completed* pipeline carry (``carry['step'] >= S+L-1``):
+    returns ``(ys [S, B, T, D], final_state, captured)`` — the same triple
+    (captured None unless the carry was built with capture_states) the
+    one-shot ``run_diagonal`` produces, with ``captured`` already
+    re-gathered into per-boundary snapshots."""
+    S = carry["ys"].shape[0]
+    captured = None
+    if "cap" in carry:
+        captured = boundary_states_from_capture(layout, carry["cap"], S)
+    return carry["ys"], carry["state"], captured

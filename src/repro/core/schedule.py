@@ -63,6 +63,33 @@ def is_minimal(groups, n_segments: int, n_layers: int) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Suspended-pipeline cursors (resumable diagonal prefill, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def n_diagonal_groups(n_segments: int, n_layers: int) -> int:
+    """Total anti-diagonal groups of the (S, L) grid — the Lemma 3.1
+    minimum, and therefore the step count at which a suspended pipeline
+    (core/diagonal.pipeline_step) is complete."""
+    return n_segments + n_layers - 1
+
+
+def segments_completed(step: int, n_segments: int, n_layers: int) -> int:
+    """Drain cursor of a suspended pipeline: how many segments have passed
+    through every layer after ``step`` anti-diagonal groups (segment s
+    finishes at group s + L - 1). Clipped to [0, S] so overshooting the
+    final group (the stepper's masked no-op steps) reads as 'all done'."""
+    return max(0, min(step - (n_layers - 1), n_segments))
+
+
+def segments_entered(step: int, n_segments: int, n_layers: int) -> int:
+    """Fill cursor of a suspended pipeline: how many segments have been
+    inserted into slot 0 after ``step`` groups (segment s enters at group
+    s), clipped to the grid."""
+    del n_layers
+    return max(0, min(step, n_segments))
+
+
+# ---------------------------------------------------------------------------
 # Stack layout
 # ---------------------------------------------------------------------------
 

@@ -47,8 +47,20 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--max-queue", type=int, default=None,
-                    help="reject (structured queue_full event) beyond this "
-                         "many queued requests")
+                    help="push model: drain the source into a backlog of at "
+                         "most this many requests and reject (structured "
+                         "queue_full event) beyond it; default is the pull "
+                         "model (requests pulled lazily between chunks)")
+    ap.add_argument("--prefill-groups-per-chunk", type=int, default=4,
+                    help="interleaved admission (DESIGN.md §11): advance "
+                         "the admitting request's diagonal prefill this "
+                         "many groups per decode chunk instead of blocking "
+                         "every slot for the whole prompt; 0 = legacy "
+                         "blocking admission")
+    ap.add_argument("--fused-admission", action="store_true",
+                    help="run the admission's diagonal groups inside the "
+                         "same jitted launch as the decode chunk (one "
+                         "dispatch per chunk interval)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="segment-granular prefix cache: requests share a "
                          "system prompt; admission transplants the cached "
@@ -135,8 +147,11 @@ def main():
         n_tok = 0
         outs = {r.req_id: [] for r in reqs}
         metrics = {}
-        for ev in eng.serve(reqs, n_slots=args.slots, chunk=args.chunk,
-                            max_queue=args.max_queue):
+        for ev in eng.serve(
+                reqs, n_slots=args.slots, chunk=args.chunk,
+                max_queue=args.max_queue,
+                prefill_groups_per_chunk=args.prefill_groups_per_chunk,
+                fused_admission=args.fused_admission):
             if isinstance(ev, RequestError):
                 print(f"{ev.req_id}: REJECTED [{ev.code}] {ev.message}")
                 continue
@@ -148,8 +163,13 @@ def main():
                       f"ttft={ev.ttft_s:.2f}s, {ev.tok_s:.1f} tok/s) "
                       f"first 8: {outs[ev.req_id][:8]}")
         dt = time.perf_counter() - t0
+        k = args.prefill_groups_per_chunk
+        adm = ("blocking" if k == 0 else
+               "blocking(jitted stepper, whole stage per advance)" if k < 0
+               else f"interleaved(k={k}"
+                    f"{', fused' if args.fused_admission else ''})")
         print(f"arch={cfg.name} mode={args.serve_mode} slots={args.slots} "
-              f"requests={args.requests}")
+              f"requests={args.requests} admission={adm}")
         print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
         if prefix_cache is not None:
             st = prefix_cache.stats.as_dict()

@@ -37,6 +37,27 @@ from repro.models.blocks import make_apply_block
 from repro.models.layers import norm, rmsnorm
 
 
+def resolve_grouped_apply(cfg, impl=None, *, mode: str = "segmented",
+                          ssm_method: str = "assoc",
+                          use_kernel: bool | None = None,
+                          interpret: bool | None = None):
+    """Resolve the ``grouped_impl`` knob (explicit override, else
+    cfg.grouped_impl) to the executor's grouped application: ``None`` for
+    'vmap' (the executor falls back to ``jax.vmap(apply_block)``), a
+    ``make_grouped_apply`` closure for 'fused'. Shared by
+    ``models.model.forward_hidden`` and the serving prefill pipeline
+    (``serve/engine.py``), so the blocking and resumable prefill paths
+    select the exact same grouped launch."""
+    impl = impl or cfg.grouped_impl
+    if impl not in ("vmap", "fused"):
+        raise ValueError(f"unknown grouped_impl {impl!r} "
+                         "(expected 'vmap' or 'fused')")
+    if impl == "vmap":
+        return None
+    return make_grouped_apply(cfg, mode=mode, ssm_method=ssm_method,
+                              use_kernel=use_kernel, interpret=interpret)
+
+
 def make_grouped_apply(cfg, *, mode: str = "segmented",
                        ssm_method: str = "scan",
                        use_kernel: bool | None = None,

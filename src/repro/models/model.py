@@ -253,12 +253,11 @@ def forward_hidden(params: Dict, cfg: ArchConfig, tokens: jax.Array, *,
     if schedule == "diagonal":
         run = run_diagonal
         kw["buf_spec"] = slot_spec
-        impl = grouped_impl or cfg.grouped_impl
-        assert impl in ("vmap", "fused"), impl
-        if impl == "fused":
-            from repro.models.grouped_blocks import make_grouped_apply
-            kw["grouped_apply"] = make_grouped_apply(
-                cfg, mode=block_mode, ssm_method=ssm_method)
+        from repro.models.grouped_blocks import resolve_grouped_apply
+        ga = resolve_grouped_apply(cfg, grouped_impl, mode=block_mode,
+                                   ssm_method=ssm_method)
+        if ga is not None:
+            kw["grouped_apply"] = ga
     else:
         run = run_sequential
     if capture_states:

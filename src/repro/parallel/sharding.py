@@ -333,5 +333,53 @@ def slot_buf_spec(mesh: Mesh, n_layers: int, batch: int) -> Optional[P]:
     return P(stage, bax, None, None)
 
 
+def pipeline_carry_specs(carry_shape: Any, mesh: Mesh, n_layers: int,
+                         batch: int, *,
+                         stacked_axis: Optional[str] = None) -> Any:
+    """NamedShardings for a suspended diagonal-pipeline carry and its
+    read-only ``xs`` input (DESIGN.md §11) — mesh-safe per the §10 rules:
+
+      * ``buf`` [L, B, T, D] — ``slot_buf_spec`` (slots over 'stage',
+        batch over the DP axes);
+      * ``state`` — the executor state tree via the decode-state rules
+        (A/z/h/conv placement identical to the serving pool, stacked
+        pattern leaves over ``stacked_axis``);
+      * ``ys`` / ``xs`` [S(+L-1), B, T, D] — batch over the DP axes,
+        segment/step dims replicated (every step reads one segment);
+      * ``cap`` — per-group capture [S+L-1, (n_super,) B, ...]: batch with
+        the DP axes, stacked dim over ``stacked_axis`` when divisible;
+      * ``step`` — replicated scalar cursor.
+
+    The engine commits the freshly built carry to these specs once at
+    pipeline start; every subsequent ``prefill_step`` output inherits the
+    placement (the step body re-constrains buf/state internally)."""
+    bspec = slot_buf_spec(mesh, n_layers, batch)
+    bax = batch_axes(mesh, batch, leaf="pipeline_carry")
+    seg_spec = NamedSharding(mesh, P(None, bax, None, None))
+    out = {
+        "buf": NamedSharding(mesh, bspec if bspec is not None
+                             else P(None, None, None, None)),
+        "state": decode_state_specs(carry_shape["state"], mesh, batch,
+                                    stacked_axis=stacked_axis),
+        "step": NamedSharding(mesh, P()),
+        "ys": seg_spec,
+        "xs": seg_spec,
+    }
+    if "cap" in carry_shape:
+        def one(path, leaf):
+            names = _path_names(path)
+            stacked = "pattern" in names
+            bdim = 2 if stacked else 1           # [steps, (n_super,) B, ...]
+            spec = [None] * len(leaf.shape)
+            if len(leaf.shape) > bdim:
+                spec[bdim] = bax
+            if (stacked and stacked_axis
+                    and _div(leaf.shape[1], mesh.shape[stacked_axis])):
+                spec[1] = stacked_axis
+            return NamedSharding(mesh, P(*spec))
+        out["cap"] = jax.tree_util.tree_map_with_path(one, carry_shape["cap"])
+    return out
+
+
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())

@@ -1,4 +1,5 @@
-from repro.serve.engine import ServeEngine, GenerationResult
+from repro.serve.engine import (ServeEngine, GenerationResult,
+                                PrefillPipeline)
 from repro.serve.scheduler import (ContinuousScheduler, Request, RequestError,
                                    StreamEvent)
 from repro.serve.state_store import (PrefixCache, SegmentSnapshot,

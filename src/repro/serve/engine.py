@@ -37,6 +37,16 @@ GSPMD inserting the collectives. State-store blobs cross the mesh boundary
 host-portable (gather-on-capture in the store, `_place_state`
 scatter-on-restore here), so snapshots resume across different mesh shapes.
 
+Prefill is also available as a *resumable pipeline* (DESIGN.md §11):
+`start_prefill` returns a `PrefillPipeline` whose `advance()` runs one
+bounded unit — `prefill_groups_per_chunk` anti-diagonal groups via the
+jitted `prefill_step` stepper (carry donated), or one tail `decode_step`
+piece — so the continuous-batching scheduler interleaves a new request's
+admission with decode chunks instead of blocking every slot for the whole
+prompt. The pipeline shares the one-shot executor's step body bit for bit
+and `_prefill`'s stage/piece decomposition, so it is token-identical
+(greedy) to the blocking path by construction.
+
 Multi-request continuous batching lives in `serve/scheduler.py`; the
 `ServeEngine.serve(requests)` iterator is the streaming front door.
 """
@@ -52,11 +62,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
+from repro.core import diagonal as diag
 from repro.core.memory import RECURRENT_KEYS
-from repro.core.schedule import StackLayout
+from repro.core.schedule import StackLayout, n_diagonal_groups
 from repro.models import (boundary_logits, decode_state_init,
-                          decode_state_sharding, decode_step, flush_segment,
-                          forward_hidden, last_logits)
+                          decode_state_sharding, decode_step, embed_segments,
+                          flush_segment, forward_hidden, init_state,
+                          last_logits)
 from repro.parallel import sharding as shd
 
 
@@ -186,6 +198,10 @@ class ServeEngine:
         self._loops: Dict = {}    # (max_new, greedy, top_k) -> jitted loop
         self._sched_fns: Dict = {}   # chunk -> jitted scheduler fns (shared
         #                              across serve() calls / slot counts)
+        self._pipe_steps: Dict = {}  # (S, B, capture, k) -> jitted
+        #                              prefill_step (resumable pipeline §11)
+        self._fused_fns: Dict = {}   # (chunk, S, capture, k) -> fused
+        #                              decode-chunk + prefill-step program
 
     # ------------------------------------------------------------------
     # Mesh placement (DESIGN.md §10) — no-ops on a mesh-less engine
@@ -250,12 +266,14 @@ class ServeEngine:
     # Prefill: diagonal full segments (+ prefix cache) then bucketed tail
     # ------------------------------------------------------------------
 
+    def _mesh_ctx(self):
+        """Ambient-mesh context: the diagonal executor (and the pipeline
+        stepper) constrain buffers with raw PartitionSpecs, which resolve
+        against the ambient mesh — enter it around any prefill trace."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
     def _forward(self, toks, exec_state, enc_frames, capture: bool):
-        # the diagonal executor constrains its slot buffer with raw
-        # PartitionSpecs (core/diagonal.py), which resolve against the
-        # ambient mesh — enter it for the prefill forward
-        ctx = self.mesh if self.mesh is not None else contextlib.nullcontext()
-        with ctx:
+        with self._mesh_ctx():
             return forward_hidden(
                 self.params, self.cfg, toks, schedule=self.schedule,
                 enc_frames=enc_frames, grouped_impl=self.grouped_impl,
@@ -325,35 +343,89 @@ class ServeEngine:
         assert logits is not None, "empty prompt"
         return logits, dstate, pos, cached
 
-    def _maybe_flush(self, dstate, pos: int):
-        """ARMT segment boundary: flush memory and reset the segment cache.
-        ``pos`` is tracked host-side — decode_step advances the device-side
-        ``dstate['pos']`` by exactly the tokens fed, so the two never diverge
-        and no device->host readback is needed per step."""
-        if (self.serve_mode == "armt" and self.cfg.armt
-                and pos >= self.seg_len):
-            return self._flush(self.params, dstate), 0
-        return dstate, pos
-
     def _chunk(self, dstate, toks, pos: int):
         """Feed a multi-token chunk, flushing at ARMT segment boundaries.
         With bucket_prompts, each piece is the largest power of two that
-        fits before the next boundary — O(log seg_len) compiled shapes."""
+        fits before the next boundary — O(log seg_len) compiled shapes.
+        Implemented as a loop over ``_tail_pieces`` — the same
+        decomposition the resumable PrefillPipeline runs one piece per
+        ``advance()``, so the blocking and interleaved tail paths cannot
+        drift."""
         logits = None
-        t = 0
-        T = toks.shape[1]
-        while t < T:
-            room = (self.seg_len - pos
-                    if self.serve_mode == "armt" else T - t)
-            take = min(room, T - t)
-            if self.bucket_prompts:
-                take = 1 << (take.bit_length() - 1)
+        pieces, end_pos = _tail_pieces(self, toks.shape[1], pos)
+        for (t, take, flush) in pieces:
             logits, dstate = self._step(self.params, dstate,
                                         toks[:, t:t + take])
-            t += take
-            pos += take
-            dstate, pos = self._maybe_flush(dstate, pos)
-        return logits, dstate, pos
+            if flush:
+                dstate = self._flush(self.params, dstate)
+        return logits, dstate, end_pos
+
+    # ------------------------------------------------------------------
+    # Resumable prefill pipeline (interleaved admission, DESIGN.md §11)
+    # ------------------------------------------------------------------
+
+    def exec_apply(self):
+        """The serving executor's block application pair
+        ``(apply_block, grouped_apply)`` — the ONE source of truth for the
+        numerics-critical (mode='segmented', ssm_method='assoc',
+        grouped_impl) combination that the blocking prefill inherits
+        through ``forward_hidden``'s defaults. ``prefill_step`` and the
+        scheduler's ``fused_fns`` both build their diagonal stages from
+        this, so the interleaved==blocking bit-identity cannot be broken
+        by one copy drifting."""
+        from repro.models.blocks import make_apply_block
+        from repro.models.grouped_blocks import resolve_grouped_apply
+        apply = make_apply_block(self.cfg, mode="segmented",
+                                 ssm_method="assoc")
+        gapply = resolve_grouped_apply(self.cfg, self.grouped_impl,
+                                       mode="segmented", ssm_method="assoc")
+        return apply, gapply
+
+    def prefill_step(self, n_segments: int, batch: int, capture: bool,
+                     n_groups: int):
+        """The jitted resumable-prefill stepper for a diagonal stage of
+        ``n_segments`` segments: ``step(params, xs, carry) -> carry``
+        advancing ``n_groups`` anti-diagonal groups per call. Bucketed like
+        ``_prefill`` (stages are power-of-two segment groups, so the cache
+        holds O(log) programs per group budget), capture-aware (the carry's
+        ``cap`` buffers feed the prefix cache exactly like the blocking
+        path), and mesh-aware (slot-buffer/state constraints identical to
+        ``_forward``'s diagonal run).
+
+        The carry argument is DONATED on backends that honor donation —
+        callers must never pass arrays a store still owns (see
+        PrefillPipeline's fresh-buffer note)."""
+        key = (n_segments, batch, capture, n_groups)
+        if key in self._pipe_steps:
+            return self._pipe_steps[key]
+        layout = StackLayout.from_config(self.cfg)
+        apply, gapply = self.exec_apply()
+        buf_spec = self._slot_spec(batch)
+
+        def step(params, xs, carry):
+            exec_params = {"prelude": params["prelude"],
+                           "pattern": params["pattern"]}
+            return diag.pipeline_step(layout, exec_params, xs, carry, apply,
+                                      n_groups=n_groups, buf_spec=buf_spec,
+                                      grouped_apply=gapply)
+
+        donate = (2,) if jax.default_backend() != "cpu" else ()
+        self._pipe_steps[key] = jax.jit(step, donate_argnums=donate)
+        return self._pipe_steps[key]
+
+    def start_prefill(self, prompts: jax.Array, *,
+                      groups_per_call: Optional[int] = 4,
+                      session_entry=None) -> "PrefillPipeline":
+        """Begin a *resumable* admission (DESIGN.md §11): returns a
+        PrefillPipeline equivalent to ``_prefill(prompts)`` (or, with
+        ``session_entry``, to the session-resume chunk feed) whose
+        ``advance()`` runs one bounded unit of work — ``groups_per_call``
+        anti-diagonal groups of the active diagonal stage, or one tail
+        chunk piece — so a scheduler can interleave decode chunks between
+        calls instead of blocking on the whole prefill."""
+        return PrefillPipeline(self, prompts,
+                               groups_per_call=groups_per_call,
+                               session_entry=session_entry)
 
     # ------------------------------------------------------------------
     # On-device decode loop
@@ -493,16 +565,322 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def serve(self, requests: Iterable, *, n_slots: int = 4,
-              chunk: int = 8, max_queue: Optional[int] = None) -> Iterator:
+              chunk: int = 8, max_queue: Optional[int] = None,
+              prefill_groups_per_chunk: int = 4,
+              fused_admission: bool = False) -> Iterator:
         """Continuous-batching streaming front door: admit `Request`s into a
         fixed pool of decode slots and yield `StreamEvent`s as tokens are
         produced. Rejections (queue-full, invalid request, evicted session)
         come back as structured `RequestError` events on the same stream —
         the iterator never raises mid-serve for a bad request (see
-        serve/scheduler.py for the slot-state invariants)."""
+        serve/scheduler.py for the slot-state invariants).
+
+        prefill_groups_per_chunk: admission fairness knob (DESIGN.md §11) —
+        the new request's prefill advances this many diagonal groups per
+        decode chunk instead of blocking every slot for its whole prompt;
+        0 restores the legacy blocking admission. fused_admission: run the
+        admission's diagonal groups inside the same jitted launch as the
+        decode chunk (one dispatch per interval)."""
         from repro.serve.scheduler import ContinuousScheduler
-        sched = ContinuousScheduler(self, n_slots=n_slots, chunk=chunk,
-                                    max_queue=max_queue)
+        sched = ContinuousScheduler(
+            self, n_slots=n_slots, chunk=chunk, max_queue=max_queue,
+            prefill_groups_per_chunk=prefill_groups_per_chunk,
+            fused_admission=fused_admission)
         return sched.run(requests)
+
+
+def _tail_pieces(engine: ServeEngine, total: int, pos: int):
+    """Host-side decomposition of a token-chunk feed into bounded
+    ``decode_step`` pieces: [(start, take, flush_after), ...] plus the
+    final in-segment position — ``pos`` is tracked host-side because
+    decode_step advances the device-side ``dstate['pos']`` by exactly the
+    tokens fed, so the two never diverge and no per-piece device->host
+    readback exists. The single source of truth for tail bucketing:
+    ``ServeEngine._chunk`` runs all pieces blocking, the resumable
+    PrefillPipeline runs one per ``advance()`` — token-identical by
+    construction because both consume this same decomposition."""
+    pieces = []
+    t = 0
+    while t < total:
+        room = (engine.seg_len - pos if engine.serve_mode == "armt"
+                else total - t)
+        take = min(room, total - t)
+        if engine.bucket_prompts:
+            take = 1 << (take.bit_length() - 1)
+        pos += take
+        flush = (engine.serve_mode == "armt" and engine.cfg.armt is not None
+                 and pos >= engine.seg_len)
+        pieces.append((t, take, flush))
+        if flush:
+            pos = 0
+        t += take
+    return pieces, pos
+
+
+class PrefillPipeline:
+    """A suspended/resumable admission (DESIGN.md §11).
+
+    ``ServeEngine._prefill`` decomposed into bounded work units the host
+    drives one ``advance()`` at a time:
+
+      * one *diagonal stage* per power-of-two segment group (the same
+        bucketing as ``_prefill``) — each ``advance()`` runs one jitted
+        ``engine.prefill_step`` dispatch of ``groups_per_call``
+        anti-diagonal groups on the stage's carry;
+      * one *tail piece* per bounded ``decode_step`` chunk (the same
+        decomposition as ``_chunk`` — also the whole pipeline for a
+        session resume, which replays pending + new-turn tokens).
+
+    Token-identical (greedy) to the blocking path by construction: the
+    diagonal stages share the one-shot executor's step body bit for bit
+    (core/diagonal.py), tail pieces reuse the engine's jitted ``_step`` /
+    ``_flush``, prefix-cache matching/insertion and the boundary-logits
+    math run the exact same host code on the same arrays.
+
+    Carry freshness: the jitted stepper *donates* its carry, so every
+    restored leaf entering it (prefix-cache snapshot, session blob) is
+    routed through ``engine._place_state`` — the same fresh-buffer
+    guarantee the decode loop got for store blobs. Without the copy, the
+    first ``advance()`` after a cache hit would delete the store's own
+    arrays out from under it (donation-aliasing; regression-tested in
+    tests/test_serve_interleave.py). For the same reason the carry never
+    aliases the scheduler's pool: a decode chunk donating the pool between
+    ``advance()`` calls cannot invalidate a suspended carry.
+    """
+
+    def __init__(self, engine: ServeEngine, prompts, *,
+                 groups_per_call: Optional[int] = 4, session_entry=None):
+        self.engine = engine
+        # None: each advance() runs its whole diagonal stage in one jitted
+        # call (blocking semantics through the resumable machinery — the
+        # fair baseline the bench compares against, free of the legacy
+        # path's per-admission retracing)
+        if groups_per_call is not None and groups_per_call < 1:
+            raise ValueError(
+                f"groups_per_call must be >= 1 or None (whole stage per "
+                f"advance), got {groups_per_call}; the scheduler's "
+                "'0 = legacy blocking' knob never constructs a pipeline")
+        self.groups_per_call = (None if groups_per_call is None
+                                else int(groups_per_call))
+        prompts = jnp.asarray(prompts)
+        assert prompts.ndim == 2, prompts.shape
+        self.prompts = prompts
+        B, P = prompts.shape
+        self.B = B
+        cfg = engine.cfg
+        dtype = engine.params["embed"].dtype
+        self.cached = 0
+        self._logits = None
+        self._pos = 0
+        self._done = False
+        self._stage = 0
+        self._stages = []            # ("diag", off, g) | ("tail", t, take, fl)
+        self._carry = None
+        self._xs = None
+        self._exec_state = None
+        self._use_cache = False
+        self._prompt_np = None
+        self._chain = None
+
+        if session_entry is not None:
+            # O(new turn) resume: the restored blob goes through
+            # _place_state (fresh buffers — see the class docstring) and is
+            # then consumed piecewise by tail chunks only
+            if B != 1:
+                raise ValueError("sessions are per-conversation: B must be 1")
+            restored = engine._place_state(
+                {"prelude": session_entry.state["prelude"],
+                 "pattern": session_entry.state["pattern"]}, B)
+            self._dstate = {**restored,
+                            "pos": jnp.asarray(session_entry.pos, jnp.int32)}
+            toks_in = np.concatenate(
+                [session_entry.pending, np.asarray(prompts[0], np.int32)])
+            self._tail = jnp.asarray(toks_in[None])
+            self._pos = int(session_entry.pos)
+            pieces, _ = _tail_pieces(engine, int(toks_in.shape[0]), self._pos)
+            self._stages = [("tail",) + p for p in pieces]
+            return
+
+        # --- full-prefill path: mirror _prefill's host prologue ----------
+        dstate = decode_state_init(cfg, B, serve_mode=engine.serve_mode,
+                                   max_len=engine.max_len, dtype=dtype)
+        if engine.mesh is not None:
+            dstate = jax.device_put(dstate, engine.state_sharding(B))
+        self._dstate = dstate
+        n_full = P // engine.seg_len if engine.serve_mode == "armt" else 0
+        use_cache = (engine.prefix_cache is not None and B == 1
+                     and n_full > 0)
+        if use_cache:
+            from repro.serve.state_store import prefix_hash_chain
+            self._prompt_np = np.asarray(prompts[0], np.int32)
+            self._chain = prefix_hash_chain(self._prompt_np, engine.seg_len)
+            self.cached, snap = engine.prefix_cache.match(self._prompt_np,
+                                                          chain=self._chain)
+            if self.cached:
+                # fresh buffers (the stepper donates this into its carry)
+                self._exec_state = engine._place_state(snap.state, B)
+                self._logits = (
+                    jax.device_put(snap.logits, shd.replicated(engine.mesh))
+                    if engine.mesh is not None else jnp.asarray(snap.logits))
+                if self.cached == n_full:
+                    # exact full-segment hit: nothing left for the executor —
+                    # transplant straight into the decode state for the tail
+                    self._dstate = _transplant(self._exec_state, self._dstate)
+        self._use_cache = use_cache
+        rem = n_full - self.cached
+        groups = (_pow2_chunks(rem) if engine.bucket_prompts
+                  else ([rem] if rem else []))
+        off = self.cached
+        for g in groups:
+            if engine.schedule != "diagonal":
+                raise ValueError(
+                    "start_prefill needs the diagonal schedule for segment "
+                    f"stages (engine.schedule={engine.schedule!r}); use the "
+                    "blocking _prefill instead")
+            self._stages.append(("diag", off, g))
+            off += g
+        tail = prompts[:, n_full * engine.seg_len:]
+        if tail.shape[1] > 0:
+            self._tail = tail
+            pieces, _ = _tail_pieces(engine, int(tail.shape[1]), 0)
+            self._stages += [("tail",) + p for p in pieces]
+        if not self._stages:
+            assert self._logits is not None, "empty prompt"
+            self._done = True
+
+    # -- progress ----------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        """(next_token_logits, decode_state, in-segment pos, cached) — the
+        blocking ``_prefill`` quadruple; valid once ``done``."""
+        assert self._done, "pipeline not finished — keep calling advance()"
+        return self._logits, self._dstate, self._pos, self.cached
+
+    # -- diagonal stages ---------------------------------------------------
+
+    def _begin_diag(self, off: int, g: int) -> None:
+        eng = self.engine
+        cfg = eng.cfg
+        seg = eng.seg_len
+        toks_g = self.prompts[:, off * seg:(off + g) * seg]
+        with_mem = cfg.armt is not None and cfg.armt.num_mem_tokens > 0
+        x = embed_segments(eng.params, cfg, toks_g, seg, with_mem)
+        layout = StackLayout.from_config(cfg)
+        state0 = self._exec_state
+        if state0 is None:
+            state0 = init_state(cfg, self.B, "segmented",
+                                eng.params["embed"].dtype)
+        xs, carry = diag.pipeline_init(layout, state0, x,
+                                       capture_states=self._use_cache)
+        if eng.mesh is not None:
+            specs = shd.pipeline_carry_specs(
+                carry, eng.mesh, layout.n_layers, self.B,
+                stacked_axis=eng.stacked_axis)
+            xs = jax.device_put(xs, specs["xs"])
+            carry = jax.device_put(carry, {k: specs[k] for k in carry})
+        self._xs, self._carry = xs, carry
+        self._groups_done = 0
+        self._n_steps = n_diagonal_groups(g, layout.n_layers)
+        self._exec_state = None      # consumed into the (donated) carry
+
+    def _finish_diag(self, off: int, g: int) -> None:
+        eng = self.engine
+        cfg = eng.cfg
+        layout = StackLayout.from_config(cfg)
+        ys, fin, capd = diag.pipeline_finalize(layout, self._carry)
+        with_mem = cfg.armt is not None and cfg.armt.num_mem_tokens > 0
+        hidden = ys[:, :, :eng.seg_len] if with_mem else ys
+        if self._use_cache:
+            blogits = boundary_logits(eng.params, cfg, hidden)
+            for c in range(g):
+                end = (off + c + 1) * eng.seg_len
+                eng.prefix_cache.insert(
+                    self._prompt_np[:end],
+                    jax.tree_util.tree_map(lambda a, _c=c: a[_c], capd),
+                    blogits[c], key=self._chain[off + c])
+        self._logits = last_logits(eng.params, cfg, hidden)
+        self._exec_state = fin
+        self._carry = self._xs = None
+        self._stage += 1
+        if not any(s[0] == "diag" for s in self._stages[self._stage:]):
+            self._dstate = _transplant(fin, self._dstate)
+
+    def active_diag(self):
+        """(n_segments, capture, xs, carry) of the in-flight diagonal stage
+        (beginning it if needed), or None when the next unit is a tail
+        piece / the pipeline is done — the scheduler's fused admission mode
+        feeds these through its combined decode+prefill launch."""
+        if self._done or self._stage >= len(self._stages):
+            return None
+        st = self._stages[self._stage]
+        if st[0] != "diag":
+            return None
+        if self._carry is None:
+            self._begin_diag(st[1], st[2])
+        return st[2], self._use_cache, self._xs, self._carry
+
+    def _groups_per_advance(self) -> int:
+        return self.groups_per_call or self._n_steps
+
+    def _advance_diag(self, new_carry=None) -> None:
+        st = self._stages[self._stage]
+        _, off, g = st
+        if self._carry is None:
+            self._begin_diag(off, g)
+        k = self._groups_per_advance()
+        if new_carry is None:
+            step = self.engine.prefill_step(g, self.B, self._use_cache, k)
+            with self.engine._mesh_ctx():
+                self._carry = step(self.engine.params, self._xs, self._carry)
+        else:
+            self._carry = new_carry
+        self._groups_done += k
+        if self._groups_done >= self._n_steps:
+            self._finish_diag(off, g)
+
+    def apply_diag_result(self, carry) -> bool:
+        """Accept the carry advanced ``groups_per_call`` groups by a fused
+        scheduler launch; returns ``done`` like ``advance()``."""
+        self._advance_diag(new_carry=carry)
+        if self._stage >= len(self._stages):
+            self._finish()
+        return self._done
+
+    # -- tail pieces -------------------------------------------------------
+
+    def _run_tail_piece(self, stage) -> None:
+        _, t, take, flush = stage
+        eng = self.engine
+        self._logits, self._dstate = eng._step(eng.params, self._dstate,
+                                               self._tail[:, t:t + take])
+        self._pos += take
+        if flush:
+            self._dstate = eng._flush(eng.params, self._dstate)
+            self._pos = 0
+        self._stage += 1
+
+    # -- driver ------------------------------------------------------------
+
+    def _finish(self) -> None:
+        assert self._logits is not None, "empty prompt"
+        self._done = True
+
+    def advance(self) -> bool:
+        """Run one bounded unit (k diagonal groups or one tail piece);
+        returns True when the admission is complete (``result()`` ready)."""
+        if self._done:
+            return True
+        st = self._stages[self._stage]
+        if st[0] == "diag":
+            self._advance_diag()
+        else:
+            self._run_tail_piece(st)
+        if self._stage >= len(self._stages):
+            self._finish()
+        return self._done
 
 

@@ -14,14 +14,34 @@ per-token device->host transfer. Tokens cross to the host once per
 ``chunk`` steps (a single transfer of the chunk's token block), which is
 when finished slots are freed and queued requests admitted.
 
-Admission runs the diagonal prefill (ServeEngine._prefill, including the
-fused grouped path when the engine was built with grouped_impl='fused') on
-the new request alone, then transplants the resulting B=1 decode state into
-a free slot of the pool with ``.at[slot].set`` — other slots keep decoding
-across admissions (their rows are untouched). With a prefix cache on the
-engine, admission prefills only the uncached tail segments; with a session
-store, a request carrying a known ``session_id`` transplants the stored
+Admission is *interleaved* by default (DESIGN.md §11): the new request's
+prefill runs as a resumable diagonal pipeline (``ServeEngine.start_prefill``)
+that advances ``prefill_groups_per_chunk`` anti-diagonal groups between
+decode chunks, so a 128k-token admission no longer freezes every decoding
+slot for its whole prompt — the last head-of-line block the diagonal
+schedule left in the serving stack. ``prefill_groups_per_chunk=0`` restores
+the legacy blocking admission (one ``ServeEngine._prefill`` call); with
+``fused_admission=True`` the admitting request's segment-cells ride the
+same jitted launch as the decode cells (one combined program per chunk
+interval, ``fused_fns``). Either way the finished B=1 state is
+transplanted into a free slot of the pool with ``.at[slot].set`` — other
+slots keep decoding across admissions (their rows are untouched), and the
+admission itself is token-identical (greedy) to the blocking path
+(tests/test_serve_interleave.py). With a prefix cache on the engine,
+admission prefills only the uncached tail segments; with a session store,
+a request carrying a known ``session_id`` transplants the stored
 conversation state and feeds only the new turn (O(new turn) admission).
+
+Requests are pulled from the ``requests`` iterable *lazily between
+chunks* — a live/streaming source is served as it arrives instead of being
+drained before the decode loop starts, and each request's ``t_submit`` is
+taken at pull time. With ``max_queue=None`` (the default, the pull model)
+backpressure is simply not pulling: nothing is read from the source until
+the scheduler can start it. A live source may ``yield None`` to say "no
+request ready yet" — the scheduler keeps decoding and polls again at the
+next chunk boundary rather than blocking in ``next()``. Setting ``max_queue`` selects the push model:
+the source is drained into a bounded backlog and overflow is rejected with
+a structured ``queue_full`` event (slots count as capacity, as before).
 
 Rejections are *structured*: invalid requests, a full queue, and evicted
 sessions yield ``RequestError`` events on the stream — ``run`` never raises
@@ -86,12 +106,16 @@ class StreamEvent:
     done: bool                  # True on the request's final token
     # host-clock serving metrics, chunk-granular by design: set on the
     # request's first event (ttft_s) and final event (ttft_s + tok_s).
-    # ttft_s counts from submission (queue wait included — that's the
-    # latency a caller feels); tok_s counts from *admission* (queue wait
-    # excluded, prefill included), so it measures this request's service
-    # rate, not the queue depth. GenerationResult.tok_s is decode-only.
+    # ttft_s counts from submission (pull time — queue wait included, which
+    # is the latency a caller feels); tok_s counts from *admission* (queue
+    # wait excluded, prefill included), so it measures this request's
+    # service rate, not the queue depth. GenerationResult.tok_s is
+    # decode-only. t_emit is the host clock at the chunk boundary that
+    # surfaced this token — inter-token-latency and admission-stall
+    # aggregation (benchmarks/bench_serve.py) reads it off the stream.
     ttft_s: Optional[float] = None
     tok_s: Optional[float] = None
+    t_emit: Optional[float] = None
 
 
 @dataclass
@@ -119,17 +143,47 @@ class _Slot:
     t_first: Optional[float] = None
 
 
+@dataclass
+class _Admission:
+    """Host record of the (single) in-flight interleaved admission: the
+    suspended prefill pipeline plus the slot it has reserved and the
+    metadata the transplant needs on completion."""
+    req: Request
+    slot: int
+    pipe: object                 # serve.engine.PrefillPipeline
+    entry: object                # SessionEntry or None
+    prompt: np.ndarray
+    t_submit: float
+    t_admit: float
+
+
 class ContinuousScheduler:
     """Drives a ServeEngine over many requests with continuous batching."""
 
     def __init__(self, engine, *, n_slots: int = 4, chunk: int = 8,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 prefill_groups_per_chunk: int = 4,
+                 fused_admission: bool = False):
         from repro.models import decode_state_init
         assert n_slots >= 1 and chunk >= 1
+        assert prefill_groups_per_chunk >= -1
         self.engine = engine
         self.n_slots = n_slots
         self.chunk = chunk
         self.max_queue = max_queue
+        # interleaved admission (DESIGN.md §11): diagonal groups the
+        # admitting request's pipeline advances per decode chunk; 0 =
+        # legacy blocking admission (one eager _prefill call); -1 = one
+        # whole diagonal stage per chunk (blocking semantics for
+        # single-stage prompts, but through the jitted stepper — the
+        # bench's fair blocking baseline)
+        self.prefill_groups_per_chunk = prefill_groups_per_chunk
+        self.fused_admission = fused_admission
+        self._adm: Optional[_Admission] = None
+        # (t_start, t_end) of every completed admission — the bench reads
+        # these to compute admission_stall (max decode gap overlapping an
+        # admission window)
+        self.admission_windows: List[tuple] = []
         cfg = engine.cfg
         dtype = engine.params["embed"].dtype
         self.pool = decode_state_init(
@@ -224,6 +278,17 @@ class ContinuousScheduler:
             # cache hit inside _prefill when the engine carries one)
             logits, one_state, pos, _cached = self.engine._prefill(
                 prompt[None])
+        self._install(slot, req, entry, prompt, logits, one_state, pos,
+                      t_submit, t_admit)
+        return None
+
+    def _install(self, slot: int, req: Request, entry, prompt: np.ndarray,
+                 logits, one_state, pos: int, t_submit: float,
+                 t_admit: float) -> None:
+        """Transplant a finished admission into its slot — the single
+        completion path shared by blocking (_admit) and interleaved
+        (_finish_admission) admission, so the two modes cannot drift
+        field-for-field (the token-identity invariant depends on it)."""
         first_tok = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
         self.pool, self.tok, self.active, self.remaining = self._admit_fn(
             self.pool, self.tok, self.active, self.remaining,
@@ -236,7 +301,55 @@ class ContinuousScheduler:
         s.history = (entry.tokens if entry is not None
                      else np.empty(0, np.int32))
         s.t_submit, s.t_admit, s.t_first = t_submit, t_admit, None
+        self.admission_windows.append((t_admit, time.perf_counter()))
+
+    def _interleave(self) -> bool:
+        """Interleaved admission needs the resumable pipeline's diagonal
+        stepper for segment stages; tail-only admissions ('cache' mode) are
+        schedule-agnostic. Everything else falls back to blocking."""
+        if self.prefill_groups_per_chunk == 0:
+            return False
+        eng = self.engine
+        return eng.schedule == "diagonal" or eng.serve_mode != "armt"
+
+    def _start(self, req: Request, t_submit: float) -> Optional[RequestError]:
+        """Begin serving ``req``: the full blocking admission when
+        interleaving is off/unavailable, else reserve a slot and suspendably
+        prefill via the engine's pipeline (advanced between chunks by
+        ``run``). Returns a RequestError instead of starting when
+        rejected."""
+        if not self._interleave():
+            return self._admit(req, t_submit)
+        err = self._validate(req)
+        if err is not None:
+            return err
+        t_admit = time.perf_counter()
+        prompt = np.asarray(req.prompt, np.int32)
+        entry = None
+        if req.session_id is not None:
+            from repro.serve.state_store import SessionEvicted
+            try:
+                entry = self.engine.session_store.get(req.session_id)
+            except SessionEvicted as e:
+                return RequestError(req.req_id, "session_evicted", str(e))
+        slot = self.free.popleft()
+        k = self.prefill_groups_per_chunk
+        pipe = self.engine.start_prefill(
+            prompt[None], groups_per_call=(None if k < 0 else k),
+            session_entry=entry)
+        self._adm = _Admission(req=req, slot=slot, pipe=pipe, entry=entry,
+                               prompt=prompt, t_submit=t_submit,
+                               t_admit=t_admit)
         return None
+
+    def _finish_admission(self) -> None:
+        """The in-flight pipeline completed: transplant its B=1 state into
+        the reserved slot (identical to blocking admission from here)."""
+        adm = self._adm
+        logits, one_state, pos, _cached = adm.pipe.result()
+        self._install(adm.slot, adm.req, adm.entry, adm.prompt, logits,
+                      one_state, pos, adm.t_submit, adm.t_admit)
+        self._adm = None
 
     def _persist_session(self, b: int) -> None:
         """End of generation for slot b: lift its row out of the pool
@@ -253,86 +366,161 @@ class ContinuousScheduler:
             s.session_id, state=row, pos=int(np.asarray(pos)),
             pending=np.empty(0, np.int32), tokens=history)
 
+    def _drain_chunk(self, toks, masks) -> Iterator[StreamEvent]:
+        """Cross one chunk's token block to the host and stream its events
+        (the single device->host transfer for these ``chunk`` steps)."""
+        toks_np = np.asarray(toks)
+        masks_np = np.asarray(masks)
+        now = time.perf_counter()
+        for t in range(self.chunk):
+            for b, s in enumerate(self.slots):
+                if not masks_np[t, b] or not s.active:
+                    continue
+                s.remaining -= 1
+                done = s.remaining == 0
+                tok = int(toks_np[t, b])
+                s.tokens.append(tok)
+                first = s.t_first is None
+                if first:
+                    s.t_first = now
+                ev = StreamEvent(s.req_id, tok, s.index, done, t_emit=now)
+                if first:
+                    ev.ttft_s = now - s.t_submit
+                if done:
+                    ev.ttft_s = s.t_first - s.t_submit
+                    ev.tok_s = (s.index + 1) / max(now - s.t_admit,
+                                                   1e-9)
+                yield ev
+                s.index += 1
+                if done:
+                    s.active = False
+                    if (s.session_id is not None
+                            and self.engine.session_store is not None):
+                        self._persist_session(b)
+                    self.free.append(b)
+
     def run(self, requests: Iterable[Request]) -> Iterator[
             Union[StreamEvent, RequestError]]:
-        """Generator: admits requests as slots free up and yields one
-        StreamEvent per generated token (chunk-granular latency), plus
-        RequestError events for rejected requests."""
-        t0 = time.perf_counter()
-        queue: deque = deque()
-        for req in requests:
-            # free slots count as capacity: admit straight through before
-            # queueing, so queue_full only fires under real backpressure
-            # (all slots busy AND the backlog at its limit)
-            if self.free and not queue:
-                err = self._admit(req, t_submit=t0)
-                if err is not None:
-                    yield err
-            elif self.max_queue is None or len(queue) < self.max_queue:
-                queue.append(req)
-            else:
-                yield RequestError(
-                    req.req_id, "queue_full",
-                    f"all {self.n_slots} slots busy and queue limit "
-                    f"{self.max_queue} reached")
+        """Generator: pulls requests lazily, admits as slots free up
+        (interleaving the admitting prefill with decode chunks unless
+        ``prefill_groups_per_chunk=0``), and yields one StreamEvent per
+        generated token (chunk-granular latency) plus RequestError events
+        for rejected requests.
+
+        Live sources: the iterator is only pulled when the scheduler can
+        start the request, but ``next()`` on a plain iterator is a
+        *blocking* call — a source with nothing ready would stall the
+        active streams. A live source should therefore ``yield None`` when
+        no request is ready yet: the scheduler stops pulling for that
+        round, keeps decoding, and polls again at the next chunk boundary
+        (finite lists/generators that always have a request ready are
+        unaffected)."""
+        it = iter(requests)
+        exhausted = False
+
+        def pull() -> Optional[Request]:
+            # returns None when the source is exhausted OR yielded None
+            # ("nothing ready yet") — either way the caller stops pulling
+            # this round; `exhausted` tells the two cases apart at
+            # termination time
+            nonlocal exhausted
+            if exhausted:
+                return None
+            try:
+                return next(it)
+            except StopIteration:
+                exhausted = True
+                return None
+
+        queue: deque = deque()           # (request, t_submit-at-pull)
         while True:
-            while self.free and queue:
-                err = self._admit(queue.popleft(), t_submit=t0)
+            # ---- start work: backlog first, then pull from the source ----
+            while self.free and queue and self._adm is None:
+                req, t_sub = queue.popleft()
+                err = self._start(req, t_sub)
                 if err is not None:
                     yield err
-            if not any(s.active for s in self.slots):
-                if not queue:
+            while not exhausted:
+                can_start = (bool(self.free) and not queue
+                             and self._adm is None)
+                if not can_start and self.max_queue is None:
+                    # pull model: backpressure by not pulling — nothing is
+                    # read from a live source until we can actually start it
+                    break
+                if (not can_start and self.max_queue is not None
+                        and len(queue) >= self.max_queue + len(self.free)):
+                    # push model at capacity: drain + structured rejection.
+                    # Free slots count as extra queue capacity — a slot left
+                    # idle only because another admission is in flight will
+                    # serve its queued request as soon as that one lands
+                    req = pull()
+                    if req is None:
+                        break
+                    yield RequestError(
+                        req.req_id, "queue_full",
+                        f"all {self.n_slots} slots busy or spoken for and "
+                        f"queue limit {self.max_queue} reached")
+                    continue
+                req = pull()
+                if req is None:
+                    break
+                t_sub = time.perf_counter()
+                if can_start:
+                    err = self._start(req, t_sub)
+                    if err is not None:
+                        yield err
+                else:
+                    queue.append((req, t_sub))
+
+            # ---- advance the in-flight admission by one bounded unit ----
+            toks = masks = None
+            if self._adm is not None:
+                pipe = self._adm.pipe
+                fused = None
+                if self.fused_admission and any(s.active for s in self.slots):
+                    fused = pipe.active_diag()
+                if fused is not None:
+                    # one combined launch: the decode chunk and k diagonal
+                    # groups of the admitting prefill in a single program
+                    g, capture, xs, carry = fused
+                    ffn = fused_fns(self.engine, self.chunk, g, capture,
+                                    pipe._groups_per_advance())
+                    with self.engine._mesh_ctx():
+                        (self.pool, self.tok, self.active, self.remaining,
+                         toks, masks, carry) = ffn(
+                            self.engine.params, self.pool, self.tok,
+                            self.active, self.remaining, xs, carry)
+                    done = pipe.apply_diag_result(carry)
+                else:
+                    done = pipe.advance()
+                if done:
+                    self._finish_admission()
+
+            # ---- decode chunk (unless the fused launch already ran it) ----
+            if toks is None and any(s.active for s in self.slots):
+                (self.pool, self.tok, self.active, self.remaining,
+                 toks, masks) = self._chunk_fn(
+                    self.engine.params, self.pool, self.tok,
+                    self.active, self.remaining)
+            if toks is not None:
+                yield from self._drain_chunk(toks, masks)
+            elif self._adm is None:
+                if not queue and exhausted:
                     return
-                continue
-            (self.pool, self.tok, self.active, self.remaining,
-             toks, masks) = self._chunk_fn(
-                self.engine.params, self.pool, self.tok,
-                self.active, self.remaining)
-            # the single device->host transfer for these `chunk` tokens
-            toks_np = np.asarray(toks)
-            masks_np = np.asarray(masks)
-            now = time.perf_counter()
-            for t in range(self.chunk):
-                for b, s in enumerate(self.slots):
-                    if not masks_np[t, b] or not s.active:
-                        continue
-                    s.remaining -= 1
-                    done = s.remaining == 0
-                    tok = int(toks_np[t, b])
-                    s.tokens.append(tok)
-                    first = s.t_first is None
-                    if first:
-                        s.t_first = now
-                    ev = StreamEvent(s.req_id, tok, s.index, done)
-                    if first:
-                        ev.ttft_s = now - s.t_submit
-                    if done:
-                        ev.ttft_s = s.t_first - s.t_submit
-                        ev.tok_s = (s.index + 1) / max(now - s.t_admit,
-                                                       1e-9)
-                    yield ev
-                    s.index += 1
-                    if done:
-                        s.active = False
-                        if (s.session_id is not None
-                                and self.engine.session_store is not None):
-                            self._persist_session(b)
-                        self.free.append(b)
+                if not queue:
+                    # fully idle on a live source that yielded None
+                    # ("nothing ready yet"): back off briefly instead of
+                    # spinning on next()
+                    time.sleep(1e-3)
+                # nothing active, nothing admitting: loop back to pull/admit
 
 
 
-def scheduler_fns(engine, chunk: int):
-    """Build (or fetch from the engine's cache) the jitted packed-chunk,
-    admission, and slot-extraction functions shared by every scheduler on
-    this engine."""
-    cache = engine._sched_fns
-    if chunk in cache:
-        return cache[chunk]
-    cfg = engine.cfg
-    serve_mode = engine.serve_mode
-    seg_len = engine.seg_len
+def _chunk_body_factory(cfg, serve_mode: str, seg_len: int, chunk: int):
+    """The packed decode-chunk body as a pure (un-jitted) function —
+    ``scheduler_fns`` jits it standalone; ``fused_fns`` composes it with
+    the admission pipeline's stepper inside one program."""
     armt_on = serve_mode == "armt" and cfg.armt is not None
-    donate_ok = jax.default_backend() != "cpu"
 
     def chunk_fn(params, state, tok, active, remaining):
         def body(carry, _):
@@ -363,6 +551,20 @@ def scheduler_fns(engine, chunk: int):
         (state, tok, active, remaining), (toks, masks) = jax.lax.scan(
             body, (state, tok, active, remaining), None, length=chunk)
         return state, tok, active, remaining, toks, masks
+
+    return chunk_fn
+
+
+def scheduler_fns(engine, chunk: int):
+    """Build (or fetch from the engine's cache) the jitted packed-chunk,
+    admission, and slot-extraction functions shared by every scheduler on
+    this engine."""
+    cache = engine._sched_fns
+    if chunk in cache:
+        return cache[chunk]
+    donate_ok = jax.default_backend() != "cpu"
+    chunk_fn = _chunk_body_factory(engine.cfg, engine.serve_mode,
+                                   engine.seg_len, chunk)
 
     def admit_fn(pool, tok, active, remaining, slot, one_state,
                  first_tok, pos_val, n_new):
@@ -396,3 +598,44 @@ def scheduler_fns(engine, chunk: int):
            jax.jit(extract_fn))
     cache[chunk] = fns
     return fns
+
+
+def fused_fns(engine, chunk: int, n_segments: int, capture: bool, k: int):
+    """Jitted combined program for the *fused* admission mode (DESIGN.md
+    §11): one launch runs the packed decode chunk over every slot AND ``k``
+    anti-diagonal groups of the admitting request's suspended pipeline, so
+    the admission's segment-cells ride the same dispatch window as the
+    decode cells — XLA schedules both inside a single program (and both go
+    through the grouped Pallas kernels when the engine runs
+    grouped_impl='fused'). Donates the pool/control vectors and the
+    pipeline carry (never the read-only ``xs``) on backends that honor
+    donation; the carry therefore must be fresh-buffered at pipeline start
+    (see serve.engine.PrefillPipeline)."""
+    key = (chunk, n_segments, capture, k)
+    cache = engine._fused_fns
+    if key in cache:
+        return cache[key]
+    from repro.core import diagonal as diag
+    from repro.core.schedule import StackLayout
+    cfg = engine.cfg
+    chunk_body = _chunk_body_factory(cfg, engine.serve_mode, engine.seg_len,
+                                     chunk)
+    layout = StackLayout.from_config(cfg)
+    # the same apply/grouped pair the plain stepper uses — one source of
+    # truth for the numerics-critical executor setup (engine.exec_apply)
+    apply, gapply = engine.exec_apply()
+    buf_spec = engine._slot_spec(1)      # admissions are B=1
+
+    def fused(params, state, tok, active, remaining, xs, carry):
+        state, tok, active, remaining, toks, masks = chunk_body(
+            params, state, tok, active, remaining)
+        exec_params = {"prelude": params["prelude"],
+                       "pattern": params["pattern"]}
+        carry = diag.pipeline_step(layout, exec_params, xs, carry, apply,
+                                   n_groups=k, buf_spec=buf_spec,
+                                   grouped_apply=gapply)
+        return state, tok, active, remaining, toks, masks, carry
+
+    donate = (1, 2, 3, 4, 6) if jax.default_backend() != "cpu" else ()
+    cache[key] = jax.jit(fused, donate_argnums=donate)
+    return cache[key]

@@ -1,0 +1,421 @@
+"""Interleaved chunked prefill (DESIGN.md §11): the resumable diagonal
+pipeline is bit-exact vs the one-shot executor, and interleaved/fused
+admission is token-identical (greedy) to the blocking path across admission
+timings, segment phases, prefix-cache hits, and session resume; the
+suspended carry never aliases store entries or the decode pool (the
+donation-safety regression); requests are pulled lazily from a live source.
+An 8-fake-device mesh variant runs in a slow-marked subprocess (the
+test_serve_sharded.py pattern)."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import diagonal as D
+from repro.core.schedule import (StackLayout, n_diagonal_groups,
+                                 segments_completed, segments_entered)
+from repro.models import init_params, init_state
+from repro.models.blocks import make_apply_block
+from repro.serve import (ContinuousScheduler, PrefixCache, Request,
+                         ServeEngine, SessionStore, StreamEvent)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _toks(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(8, cfg.vocab, (n,)).astype(np.int32)
+
+
+def _requests(cfg, lens, max_new, seed=0):
+    return [Request(req_id=f"r{i}", prompt=_toks(cfg, L, seed=seed + i),
+                    max_new=max_new)
+            for i, L in enumerate(lens)]
+
+
+def _collect(events):
+    outs = {}
+    for ev in events:
+        assert isinstance(ev, StreamEvent), ev
+        outs.setdefault(ev.req_id, []).append(ev.token)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Core stepper: suspend/resume is exact
+# ---------------------------------------------------------------------------
+
+def test_pipeline_stepper_bitexact_vs_run_diagonal(setup):
+    """pipeline_init/step/finalize reproduce run_diagonal bit-for-bit for
+    every group budget — including budgets that overshoot the final group
+    (masked no-op steps) — with and without capture."""
+    cfg, params = setup
+    layout = StackLayout.from_config(cfg)
+    apply = make_apply_block(cfg, mode="segmented", ssm_method="assoc")
+    ep = {"prelude": params["prelude"], "pattern": params["pattern"]}
+    S, B = 5, 1
+    T = cfg.armt.segment_len + cfg.armt.num_mem_tokens
+    segs = jax.random.normal(jax.random.PRNGKey(1), (S, B, T, cfg.d_model))
+    st0 = init_state(cfg, B, "segmented", jnp.float32)
+    n_steps = n_diagonal_groups(S, layout.n_layers)
+
+    ys_ref, fin_ref, cap_ref = D.run_diagonal(layout, ep, st0, segs, apply,
+                                              capture_states=True)
+    bs_ref = D.boundary_states_from_capture(layout, cap_ref, S)
+
+    for k in (1, 3, n_steps, n_steps + 5):
+        xs, carry = D.pipeline_init(layout, st0, segs, capture_states=True)
+        step = jax.jit(lambda p, x, c, _k=k: D.pipeline_step(
+            layout, p, x, c, apply, n_groups=_k))
+        done = 0
+        while done < n_steps:
+            carry = step(ep, xs, carry)
+            done += k
+        ys, fin, cap = D.pipeline_finalize(layout, carry)
+        np.testing.assert_array_equal(np.asarray(ys), np.asarray(ys_ref))
+        for a, b in zip(jax.tree_util.tree_leaves(fin),
+                        jax.tree_util.tree_leaves(fin_ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(cap),
+                        jax.tree_util.tree_leaves(bs_ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pipeline_cursors():
+    """Fill/drain cursor bookkeeping of a suspended pipeline (schedule.py):
+    segment s enters at group s and finishes at group s + L - 1; both clip
+    at the grid edges (the stepper's overshoot steps)."""
+    S, L = 5, 3
+    n = n_diagonal_groups(S, L)
+    assert n == 7
+    assert [segments_entered(i, S, L) for i in range(n + 2)] == \
+        [0, 1, 2, 3, 4, 5, 5, 5, 5]
+    assert [segments_completed(i, S, L) for i in range(n + 2)] == \
+        [0, 0, 0, 1, 2, 3, 4, 5, 5]
+
+
+# ---------------------------------------------------------------------------
+# Token identity: interleaved / fused admission vs blocking
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(prefill_groups_per_chunk=1),
+    dict(prefill_groups_per_chunk=3),
+    dict(prefill_groups_per_chunk=64),     # whole prefill in one advance
+    dict(prefill_groups_per_chunk=2, fused_admission=True),
+])
+def test_interleaved_token_identity(setup, kw):
+    """Acceptance: interleaved (and fused) admission == blocking admission
+    == single-request generate, token for token, across admission timings
+    (more requests than slots), segment phases (mid-segment / at-boundary
+    prompts), and group budgets from 1 to whole-prefill-per-call."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    lens = [2 * seg, 2 * seg + 1, seg - 1, 13, 3 * seg + seg // 2]
+    max_new = 6
+    reqs = _requests(cfg, lens, max_new)
+    blocking = _collect(eng.serve(list(reqs), n_slots=3, chunk=4,
+                                  prefill_groups_per_chunk=0))
+    got = _collect(eng.serve(list(reqs), n_slots=3, chunk=4, **kw))
+    assert got == blocking
+    for r in reqs:
+        ref = eng.generate(jnp.asarray(r.prompt)[None], max_new).tokens[0]
+        assert got[r.req_id] == ref.tolist(), r.req_id
+
+
+def test_interleaved_prefix_cache_hits(setup):
+    """Interleaved admission through a prefix-cached engine: identical
+    tokens AND identical cache behavior (hits, insertions) to blocking —
+    the pipeline's capture path feeds the cache like the one-shot drain."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    sys_p = _toks(cfg, 3 * seg, seed=20)
+    prompts = [np.concatenate([sys_p, _toks(cfg, 5, seed=21 + i)])
+               for i in range(3)]
+    stats = {}
+    outs = {}
+    for mode, k in (("blocking", 0), ("interleaved", 2)):
+        cache = PrefixCache(seg, max_bytes=64 << 20)
+        eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                          prefix_cache=cache)
+        reqs = [Request(f"p{i}", p, 6) for i, p in enumerate(prompts)]
+        outs[mode] = _collect(eng.serve(reqs, n_slots=2, chunk=3,
+                                        prefill_groups_per_chunk=k))
+        st = cache.stats.as_dict()
+        stats[mode] = (st["hits"], st["insertions"], st["collisions"])
+    assert outs["interleaved"] == outs["blocking"]
+    assert stats["interleaved"] == stats["blocking"]
+    assert stats["interleaved"][0] >= 1        # the shared prefix did hit
+
+
+def test_interleaved_session_resume(setup):
+    """Sessions across serve() calls under interleaved admission: turn 2
+    resumes the stored state token-identically to the blocking scheduler
+    (and the resume admission itself is interleave-driven tail pieces)."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    t1, t2 = _toks(cfg, 2 * seg + 3, seed=30), _toks(cfg, 9, seed=31)
+    got = {}
+    for mode, k in (("blocking", 0), ("interleaved", 2)):
+        store = SessionStore(max_bytes=64 << 20)
+        eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                          session_store=store)
+        o1 = _collect(eng.serve(
+            [Request("a", t1, 6, session_id="c"),
+             Request("x", _toks(cfg, 5, seed=32), 4)],
+            n_slots=2, chunk=3, prefill_groups_per_chunk=k))
+        o2 = _collect(eng.serve([Request("b", t2, 6, session_id="c")],
+                                n_slots=2, chunk=3,
+                                prefill_groups_per_chunk=k))
+        got[mode] = (o1["a"], o1["x"], o2["b"])
+    assert got["interleaved"] == got["blocking"]
+
+
+def test_admission_mid_segment_and_at_boundary(setup):
+    """Admissions that land while decoding slots sit mid-segment and
+    exactly at a segment boundary: run enough steady tokens that the
+    admission's interleaved chunks bracket a flush."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    # steady request crosses a boundary mid-decode while the long prompt
+    # is being admitted a group at a time
+    reqs = [Request("steady", _toks(cfg, seg - 2, seed=40), 2 * seg),
+            Request("long", _toks(cfg, 4 * seg, seed=41), 5)]
+    blocking = _collect(eng.serve(list(reqs), n_slots=2, chunk=2,
+                                  prefill_groups_per_chunk=0))
+    for k in (1, 2):
+        got = _collect(eng.serve(list(reqs), n_slots=2, chunk=2,
+                                 prefill_groups_per_chunk=k))
+        assert got == blocking, k
+
+
+# ---------------------------------------------------------------------------
+# Donation safety: the suspended carry aliases nothing it doesn't own
+# ---------------------------------------------------------------------------
+
+def _leaf_ptrs(tree):
+    return {l.unsafe_buffer_pointer()
+            for l in jax.tree_util.tree_leaves(tree)
+            if isinstance(l, jax.Array)}
+
+
+def test_suspended_carry_never_aliases_stores_or_pool(setup):
+    """Regression (PR 4's fresh-buffer guarantee, extended to the
+    pipeline): the jitted stepper donates its carry, so a carry leaf that
+    aliased a prefix-cache snapshot would delete the store's arrays on the
+    first advance; and a decode chunk that donates the pool between
+    advances must not invalidate a suspended carry. Donation is a no-op on
+    CPU, so this asserts the invariant directly (buffer-pointer
+    disjointness) and then simulates donation by deleting the pool arrays
+    a donating chunk would have consumed."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    cache = PrefixCache(seg, max_bytes=64 << 20)
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      prefix_cache=cache)
+    warm = np.concatenate([_toks(cfg, 3 * seg, seed=50), _toks(cfg, 4, seed=51)])
+    eng.generate(warm[None], 3)                       # fills the cache
+    snap_ptrs = set()
+    for slot in cache._lru.entries.values():
+        snap_ptrs |= _leaf_ptrs(slot.payload)
+
+    prompt = np.concatenate([warm[:3 * seg], _toks(cfg, 4, seed=52)])
+    pipe = eng.start_prefill(prompt[None], groups_per_call=1)
+    assert pipe.cached == 3
+    pipe.advance()
+    carry_ptrs = _leaf_ptrs(pipe._carry) if pipe._carry is not None else set()
+
+    # a decode chunk that donates its pool between advances
+    from repro.serve.scheduler import scheduler_fns
+    from repro.models import decode_state_init
+    chunk_fn, _, _ = scheduler_fns(eng, 2)
+    pool = decode_state_init(cfg, 2, serve_mode="armt", max_len=256,
+                             dtype=jnp.float32, per_slot_pos=True)
+    pool_ptrs = _leaf_ptrs(pool)
+    tok = jnp.zeros((2,), jnp.int32)
+    active = jnp.ones((2,), bool)
+    remaining = jnp.full((2,), 4, jnp.int32)
+    out = chunk_fn(eng.params, pool, tok, active, remaining)
+
+    assert not (carry_ptrs & snap_ptrs), "carry aliases the prefix cache"
+    assert not (carry_ptrs & pool_ptrs), "carry aliases the decode pool"
+    # simulate the donation the jitted chunk would perform on GPU/TPU:
+    # delete the pre-chunk pool buffers, then resume the suspended prefill
+    jax.block_until_ready(out)
+    for leaf in jax.tree_util.tree_leaves(pool):
+        leaf.delete()
+    while not pipe.advance():
+        pass
+    logits, dstate, pos, cached = pipe.result()
+    ref = eng._prefill(jnp.asarray(prompt)[None])
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref[0]))
+    assert pos == ref[2] and cached == ref[3]
+    # and the cache survived the donated carry: a fresh admission still hits
+    pipe2 = eng.start_prefill(prompt[None], groups_per_call=4)
+    assert pipe2.cached == 3
+    while not pipe2.advance():
+        pass
+    np.testing.assert_array_equal(np.asarray(pipe2.result()[0]),
+                                  np.asarray(ref[0]))
+
+
+# ---------------------------------------------------------------------------
+# Lazy request pull (live sources)
+# ---------------------------------------------------------------------------
+
+def test_lazy_pull_serves_live_source(setup):
+    """The scheduler pulls requests between chunks instead of draining the
+    iterable up front: a source that requires request 1's tokens to have
+    streamed before yielding request 2 completes (it would assert under
+    the old drain-everything-first loop), and t_submit is per-request pull
+    time, so the later request's TTFT excludes the earlier one's decode."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    events = []
+
+    def source():
+        yield Request("a", _toks(cfg, seg, seed=60), 4)
+        assert any(isinstance(e, StreamEvent) and e.req_id == "a"
+                   for e in events), "source was drained eagerly"
+        yield Request("b", _toks(cfg, seg, seed=61), 4)
+
+    sched = ContinuousScheduler(eng, n_slots=1, chunk=2)
+    for ev in sched.run(source()):
+        events.append(ev)
+    done = [e for e in events if e.done]
+    assert {e.req_id for e in done} == {"a", "b"}
+    assert len(sched.admission_windows) == 2
+    a_done = next(e for e in done if e.req_id == "a")
+    b_done = next(e for e in done if e.req_id == "b")
+    # b was pulled after a finished: its submission-relative TTFT must not
+    # include a's entire service time (it would under the shared-t0 clock)
+    assert b_done.ttft_s < a_done.ttft_s + a_done.t_emit - events[0].t_emit
+    assert all(e.t_emit is not None for e in events)
+
+
+def test_live_source_defers_with_none(setup):
+    """A live source yields None for 'no request ready yet': the scheduler
+    keeps decoding (instead of blocking inside next() while active streams
+    starve) and picks the next request up at a later chunk boundary."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    events = []
+    polls = {"n": 0}
+
+    def source():
+        yield Request("a", _toks(cfg, seg, seed=65), 6)
+        # "nothing ready" until a finishes decoding (3 chunks) — the
+        # scheduler must keep chunking instead of blocking in next()
+        while not any(isinstance(e, StreamEvent) and e.req_id == "a"
+                      and e.done for e in events):
+            polls["n"] += 1
+            yield None
+        yield Request("b", _toks(cfg, seg, seed=66), 4)
+
+    sched = ContinuousScheduler(eng, n_slots=2, chunk=2)
+    for ev in sched.run(source()):
+        events.append(ev)
+    done = {e.req_id for e in events if isinstance(e, StreamEvent) and e.done}
+    assert done == {"a", "b"}
+    assert polls["n"] >= 1       # the deferral path actually exercised
+
+
+def test_push_model_free_slots_count_as_capacity(setup):
+    """With an interleaved admission in flight, a free slot is spoken-for
+    capacity, not dead: queued requests may exceed max_queue by the free
+    slot count, and queue_full fires only when slots AND backlog are
+    exhausted (regression: the first interleaved implementation rejected
+    while slots sat idle)."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    reqs = [Request("a", _toks(cfg, 4 * seg, seed=70), 3),   # long admission
+            Request("b", _toks(cfg, 5, seed=71), 3),
+            Request("c", _toks(cfg, 5, seed=72), 3),          # fits: free slot
+            Request("d", _toks(cfg, 5, seed=73), 3)]          # true overflow
+    evs = list(eng.serve(reqs, n_slots=2, chunk=2, max_queue=1,
+                         prefill_groups_per_chunk=1))
+    errs = {e.req_id: e.code for e in evs
+            if not isinstance(e, StreamEvent)}
+    assert errs == {"d": "queue_full"}, errs
+    done = {e.req_id for e in evs if isinstance(e, StreamEvent) and e.done}
+    assert done == {"a", "b", "c"}
+
+
+# ---------------------------------------------------------------------------
+# 8-fake-device mesh variant (subprocess, slow-marked)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import dataclasses
+import numpy as np
+import jax
+jax.config.update("jax_default_matmul_precision", "highest")
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+from repro.launch.mesh import parse_mesh
+
+cfg = dataclasses.replace(get_smoke_config("h2o-danube-1.8b"), n_kv_heads=4)
+params = init_params(cfg, jax.random.PRNGKey(0))
+seg = cfg.armt.segment_len
+rng = np.random.default_rng(7)
+
+ref_eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+reqs = [Request(req_id=f"r{i}",
+                prompt=rng.integers(8, cfg.vocab, (L,)).astype(np.int32),
+                max_new=5)
+        for i, L in enumerate([2 * seg, seg + 3, 7, seg - 1])]
+refs = {r.req_id: ref_eng.generate(np.asarray(r.prompt)[None], 5).tokens[0]
+        for r in reqs}
+
+for spec in ("data=2,model=4", "stage=2,model=4"):
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      mesh=parse_mesh(spec))
+    for kw in (dict(prefill_groups_per_chunk=2),
+               dict(prefill_groups_per_chunk=2, fused_admission=True)):
+        outs = {}
+        for ev in eng.serve(list(reqs), n_slots=2, chunk=3, **kw):
+            outs.setdefault(ev.req_id, []).append(ev.token)
+        for r in reqs:
+            assert outs[r.req_id] == refs[r.req_id].tolist(), (spec, kw, r.req_id)
+    print(f"OK interleave_{spec.split(',')[0].split('=')[0]}")
+"""
+
+
+@pytest.mark.slow
+def test_interleaved_admission_sharded_token_identical():
+    """Interleaved + fused admission on an 8-fake-device mesh (TP and
+    stage-pipeline meshes) is token-identical to the single-device blocking
+    reference — the suspended carry crosses GSPMD programs via
+    pipeline_carry_specs. Subprocess because XLA_FLAGS must be set before
+    jax imports (test_serve_sharded.py pattern); timeout skips."""
+    try:
+        r = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                           capture_output=True, text=True, timeout=600,
+                           env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                "HOME": "/root"})
+    except subprocess.TimeoutExpired:
+        pytest.skip("interleaved-mesh subprocess exceeded 600s: environment "
+                    "too constrained to compile the 8-fake-device GSPMD "
+                    "programs — exactness is asserted whenever the compile "
+                    "finishes (CI runs this in the sharded-serving step)")
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-2000:])
+    for m in ("interleave_data", "interleave_stage"):
+        assert f"OK {m}" in r.stdout, (m, r.stdout[-1000:])
