@@ -22,6 +22,15 @@ admission modes — blocking (``prefill_groups_per_chunk=0``, the legacy
 path) and interleaved (the default resumable-pipeline path) — recording
 the stall reduction at equal total throughput.
 
+A ``burst_admission`` scenario (DESIGN.md §12) pushes a 4-prompt burst of
+long admissions through the backlog alongside steady decoders and compares
+blocking vs single-carry interleaved (PR 5, ``max_concurrent=1``) vs the
+pooled admission pool (``max_concurrent=4``, round-robin) — the headline
+is the summed burst queue wait (``StreamEvent.queue_wait_s``, stamped
+``t_admit - t_submit`` by the scheduler) at a paired steady-decode
+throughput ratio ≥ 0.95. Every scheduler record now also carries
+``queue_wait_s_mean``/``queue_wait_s_max``/``concurrent_admissions_max``.
+
 Two state-store workloads (serve/state_store.py):
   * shared_prefix — N requests sharing a multi-segment system prompt;
     cold admission (PR 2 path: full diagonal prefill per request) vs a
@@ -105,17 +114,25 @@ def _admission_stall(windows, emit_times):
     return stall
 
 
-def _drive(eng, reqs, n_slots, chunk, *, groups_per_chunk=4, fused=False):
+def _drive(eng, reqs, n_slots, chunk, *, groups_per_chunk=4, fused=False,
+           max_concurrent=None, fairness="round_robin", max_queue=None,
+           detail=False):
     # per-request timings come from the stream's own metrics (StreamEvent
-    # ttft_s / tok_s / t_emit) — the bench no longer re-derives them
-    # externally; the scheduler is built directly so its admission windows
-    # are readable afterwards
+    # ttft_s / tok_s / t_emit / queue_wait_s) — the bench no longer
+    # re-derives them externally; the scheduler is built directly so its
+    # admission windows are readable afterwards. max_queue switches to the
+    # push model (backlog drained at t=0), which is what makes queue_wait_s
+    # measure real head-of-line waiting instead of pull latency.
     from repro.serve.scheduler import ContinuousScheduler
     sched = ContinuousScheduler(eng, n_slots=n_slots, chunk=chunk,
+                                max_queue=max_queue,
                                 prefill_groups_per_chunk=groups_per_chunk,
-                                fused_admission=fused)
+                                fused_admission=fused,
+                                max_concurrent_admissions=max_concurrent,
+                                admission_fairness=fairness)
     t0 = time.perf_counter()
     ttft, tok_s, done_at, n_tok = {}, {}, {}, 0
+    qwait, conc = {}, {}
     emit_times = {}
     for ev in sched.run(iter(reqs)):
         n_tok += 1
@@ -124,9 +141,11 @@ def _drive(eng, reqs, n_slots, chunk, *, groups_per_chunk=4, fused=False):
             ttft[ev.req_id] = ev.ttft_s
             tok_s[ev.req_id] = ev.tok_s
             done_at[ev.req_id] = time.perf_counter() - t0
+            qwait[ev.req_id] = ev.queue_wait_s
+            conc[ev.req_id] = ev.concurrent_admissions
     wall = time.perf_counter() - t0
     itl_p50, itl_p99 = _itl_stats(emit_times)
-    return {
+    rec = {
         "wall_s": wall,
         "throughput_tok_s": n_tok / wall,
         "ttft_s_mean": float(np.mean(list(ttft.values()))),
@@ -138,7 +157,17 @@ def _drive(eng, reqs, n_slots, chunk, *, groups_per_chunk=4, fused=False):
         "itl_s_p99": itl_p99,
         "admission_stall_s": _admission_stall(sched.admission_windows,
                                               emit_times),
+        "queue_wait_s_mean": float(np.mean(list(qwait.values()))),
+        "queue_wait_s_max": float(np.max(list(qwait.values()))),
+        "concurrent_admissions_max": int(max(conc.values())),
     }
+    if detail:
+        rec["per_request"] = {
+            rid: {"ttft_s": ttft[rid], "tok_s": tok_s[rid],
+                  "queue_wait_s": qwait[rid],
+                  "concurrent_admissions": conc[rid]}
+            for rid in ttft}
+    return rec
 
 
 def _bench_shared_prefix(cfg, params, quick: bool):
@@ -358,6 +387,110 @@ def _bench_mixed_workload(cfg, params, quick: bool):
     return rec
 
 
+def _bench_burst_admission(cfg, params, quick: bool):
+    """A burst of long prompts landing at t=0 on a pool with free slots
+    (DESIGN.md §12, EXPERIMENTS.md §Concurrent-admissions): two steady
+    decoders plus four long admissions, pushed through the backlog (push
+    model) so ``queue_wait_s`` measures real head-of-line waiting. Three
+    admission modes over the SAME request set:
+
+      blocking (k=-1)        — whole diagonal stage per advance, one
+        admission at a time (head-of-line at equal total work);
+      interleaved_n1 (k=4, max_concurrent=1) — the PR 5 single-carry
+        resumable pipeline: decode keeps flowing but the burst still
+        serializes behind ONE suspended carry;
+      pooled_n4 (k=4, max_concurrent=4, round_robin) — the §12 admission
+        pool: every burst member's carry advances each round, same-
+        signature carries batched into one pooled launch.
+
+    The headline is ``burst_wait_s`` — the summed queue wait of the four
+    burst requests (time between submission and their admission actually
+    starting) — which the pool attacks directly: waits collapse from
+    whole-admissions-ahead to pool-capacity scheduling. Decode throughput
+    of the steady requests is recorded alongside (paired ratio vs
+    interleaved_n1; acceptance floor 0.95)."""
+    seg_b = 64
+    b_cfg = dataclasses.replace(
+        cfg, n_layers=6, d_model=128, n_heads=8, n_kv_heads=8, d_head=16,
+        d_ff=384,
+        armt=ARMTConfig(segment_len=seg_b, num_mem_tokens=8, d_mem=8))
+    b_params = init_params(b_cfg, jax.random.PRNGKey(5))
+    n_long_seg = 8 if quick else 16
+    steady_new = 192 if quick else 320
+    burst_new = 12
+    n_slots, chunk = 6, 8
+    reps = 3
+    eng = ServeEngine(b_params, b_cfg, serve_mode="armt",
+                      max_len=n_long_seg * seg_b + steady_new)
+
+    def reqs():
+        rng = np.random.default_rng(12)
+        steady = [Request(f"s{i}",
+                          rng.integers(8, b_cfg.vocab,
+                                       (2 * seg_b,)).astype(np.int32),
+                          steady_new)
+                  for i in range(2)]
+        longs = [Request(f"L{i}",
+                         rng.integers(8, b_cfg.vocab,
+                                      (n_long_seg * seg_b,)).astype(np.int32),
+                         burst_new)
+                 for i in range(4)]
+        return steady + longs
+
+    modes = (("blocking", dict(groups_per_chunk=-1, max_concurrent=1)),
+             ("interleaved_n1", dict(groups_per_chunk=4, max_concurrent=1)),
+             ("pooled_n4", dict(groups_per_chunk=4, max_concurrent=4)))
+    rec = {"n_slots": n_slots, "chunk": chunk, "segment_len": seg_b,
+           "burst_prompts": 4, "burst_prompt_segments": n_long_seg,
+           "steady_decoders": 2, "steady_max_new": steady_new,
+           "model": {"n_layers": b_cfg.n_layers, "d_model": b_cfg.d_model,
+                     "d_ff": b_cfg.d_ff}}
+    for name, kw in modes:                                         # warmup
+        _drive(eng, reqs(), n_slots, chunk, max_queue=8, detail=True, **kw)
+    # round-robin reps across modes so host drift cancels within a round
+    # (same rationale as the mixed_workload pairing)
+    runs = {name: [] for name, _ in modes}
+    for _ in range(reps):
+        for name, kw in modes:
+            r = _drive(eng, reqs(), n_slots, chunk, max_queue=8,
+                       detail=True, **kw)
+            per = r.pop("per_request")
+            r["burst_wait_s"] = float(
+                sum(per[f"L{i}"]["queue_wait_s"] for i in range(4)))
+            r["burst_ttft_s_sum"] = float(
+                sum(per[f"L{i}"]["ttft_s"] for i in range(4)))
+            r["steady_tok_s"] = float(
+                np.mean([per[f"s{i}"]["tok_s"] for i in range(2)]))
+            runs[name].append(r)
+    for name, kw in modes:
+        best = {"burst_wait_s": min, "wall_s": min,
+                "throughput_tok_s": max, "steady_tok_s": max}
+        rec[name] = {kk: float(best.get(kk, np.median)(
+            [r[kk] for r in runs[name]])) for kk in runs[name][0]}
+        rec[name]["reps"] = reps
+        rec[name].update({k: v for k, v in kw.items()})
+
+    def paired(metric, num, den):
+        return float(np.median([runs[num][i][metric] / runs[den][i][metric]
+                                for i in range(reps)]))
+
+    rec["burst_wait_reduction_x"] = paired("burst_wait_s",
+                                           "interleaved_n1", "pooled_n4")
+    rec["burst_wait_reduction_vs_blocking_x"] = paired(
+        "burst_wait_s", "blocking", "pooled_n4")
+    rec["steady_tok_s_ratio"] = paired("steady_tok_s",
+                                       "pooled_n4", "interleaved_n1")
+    n1, n4 = rec["interleaved_n1"], rec["pooled_n4"]
+    row("serve_burst_admission", n4["burst_wait_s"],
+        f"burst wait n1={n1['burst_wait_s']:.3f}s "
+        f"pooled={n4['burst_wait_s']:.3f}s "
+        f"({rec['burst_wait_reduction_x']:.1f}x, vs blocking "
+        f"{rec['burst_wait_reduction_vs_blocking_x']:.1f}x) "
+        f"steady tok/s ratio={rec['steady_tok_s_ratio']:.2f} "
+        f"conc max={n4['concurrent_admissions_max']}")
+    return rec
+
+
 def bench_serve(quick: bool = True, out_path: str | None = None,
                 mesh_spec: str | None = None):
     cfg = _config()
@@ -432,6 +565,9 @@ def bench_serve(quick: bool = True, out_path: str | None = None,
     # interleaved vs blocking admission under steady decode — runs BOTH
     # modes so the legacy blocking path stays covered in CI
     mixed_workload = _bench_mixed_workload(cfg, params, quick)
+    # pooled concurrent admissions vs the single-carry interleaved mode
+    # under a 4-prompt burst (DESIGN.md §12)
+    burst_admission = _bench_burst_admission(cfg, params, quick)
 
     # own env var — sharing BENCH_OUT with bench_diagonal would make the two
     # benches overwrite each other's artifact under benchmarks.run
@@ -454,6 +590,7 @@ def bench_serve(quick: bool = True, out_path: str | None = None,
         "shared_prefix": shared_prefix,
         "multi_turn": multi_turn,
         "mixed_workload": mixed_workload,
+        "burst_admission": burst_admission,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)

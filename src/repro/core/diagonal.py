@@ -23,7 +23,9 @@ Two drivers share one anti-diagonal step body (``_diag_body``):
     number of groups, so a long prefill can be suspended between calls —
     e.g. to let decode chunks run (serve/scheduler.py) — and resumed
     bit-exactly. Sharing the step body is what makes the two drivers
-    token-identical by construction.
+    token-identical by construction. ``pipeline_step_pool`` batches N such
+    carries (with independent cursors) into one launch for the scheduler's
+    pooled concurrent admissions (DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -354,6 +356,60 @@ def pipeline_step(layout: StackLayout, params: Dict, xs: jax.Array,
 
     carry, _ = jax.lax.scan(sub, carry, None, length=n_groups)
     return carry
+
+
+def pipeline_step_pool(layout: StackLayout, params: Dict, xs_pool: jax.Array,
+                       carry_pool: Dict, apply_block: ApplyBlock, *,
+                       n_groups: int = 1, grouped_apply=None,
+                       pool_spec=None) -> Dict:
+    """Advance a *pool* of suspended pipelines by ``n_groups`` groups each
+    (pooled concurrent admissions, DESIGN.md §12).
+
+    ``xs_pool`` / ``carry_pool`` are ``pipeline_step``'s arguments with a
+    leading pool axis [N, ...] — N same-shape (S, B, T, D) carries stacked
+    leaf-wise, including N independent ``step`` cursors [N]. The pool rides
+    one ``jax.vmap`` of the single-carry step, so each member runs the
+    exact same math as its own ``pipeline_step`` call — bit-identical by
+    construction, which is the pooled==blocking token-identity argument.
+    Heterogeneous progress is safe for the same reason fixed-budget
+    stepping is: a member whose cursor overshot its grid (or a pow2 pad
+    entry parked at the end, ``pipeline_pool_pad``) executes masked no-ops.
+
+    ``pool_spec``: optional pytree of shardings matching ``carry_pool``
+    (parallel/sharding.pool_carry_specs) applied to the pooled tree outside
+    the vmap — the per-member internal buf/state constraints are disabled
+    (``buf_spec=None``) because raw PartitionSpecs do not compose with the
+    vmapped rank.
+
+    Pure ``(params, xs_pool, carry_pool) -> carry_pool`` — jit (and donate
+    the carry pool) at the caller; serve/engine.py's ``pool_prefill_step``
+    does."""
+    def constrain(tree):
+        if pool_spec is None:
+            return tree
+        return jax.tree_util.tree_map(
+            lambda a, s: jax.lax.with_sharding_constraint(a, s),
+            tree, pool_spec)
+
+    def step_one(xs, carry):
+        return pipeline_step(layout, params, xs, carry, apply_block,
+                             n_groups=n_groups, buf_spec=None,
+                             grouped_apply=grouped_apply)
+
+    return constrain(jax.vmap(step_one)(xs_pool, constrain(carry_pool)))
+
+
+def pipeline_pool_pad(xs: jax.Array, carry: Dict, n_steps: int):
+    """A no-op pool member shaped like ``(xs, carry)``: zero buffers with
+    the group cursor parked at ``n_steps``, so every group it runs is a
+    masked no-op (the same overshoot masking fixed-budget stepping relies
+    on; zeroed inputs are safe because ``_diag_body`` already applies
+    blocks to zeroed invalid slots). Every leaf is a FRESH array — pooled
+    steppers donate their carries, so a pad entry must never alias a live
+    member or another pad."""
+    pad_carry = jax.tree_util.tree_map(jnp.zeros_like, carry)
+    pad_carry["step"] = jnp.full((), n_steps, jnp.int32)
+    return jnp.zeros_like(xs), pad_carry
 
 
 def pipeline_finalize(layout: StackLayout, carry: Dict):

@@ -90,6 +90,50 @@ def segments_entered(step: int, n_segments: int, n_layers: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Global-grid cursors (pooled concurrent admissions, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# With N admissions in flight the scheduler's work set is one *global*
+# (request, segment, layer) grid: each member contributes its own (S_r, L)
+# sub-grid with an independent group cursor, and a scheduler round executes
+# k ready groups from every member plus the decode chunk. These helpers are
+# the host-side bookkeeping for that grid — they never read a device cursor
+# (the carries' ``step`` scalars stay on device; the host mirrors progress
+# from the group budgets it hands out).
+
+def groups_remaining(step: int, n_segments: int, n_layers: int) -> int:
+    """Anti-diagonal groups left before a suspended pipeline's grid is
+    exhausted; 0 once the cursor overshot (fixed-budget no-op steps and
+    pow2 pool pad entries park there)."""
+    return max(0, n_diagonal_groups(n_segments, n_layers) - step)
+
+
+def group_size(i: int, n_segments: int, n_layers: int) -> int:
+    """Cells in anti-diagonal group i of an (S, L) grid: the number of
+    valid slots at step i (cf. the validity mask in core/diagonal.py)."""
+    lo = max(0, i - (n_layers - 1))
+    hi = min(n_segments - 1, i)
+    return max(0, hi - lo + 1)
+
+
+def cells_completed(step: int, n_segments: int, n_layers: int) -> int:
+    """(segment, layer) cells executed after ``step`` groups — saturates at
+    S*L once the grid is done (overshoot groups execute nothing)."""
+    return sum(group_size(i, n_segments, n_layers)
+               for i in range(max(0, min(step, n_diagonal_groups(
+                   n_segments, n_layers)))))
+
+
+def pool_cells_remaining(steps, segment_counts, n_layers: int) -> int:
+    """Unexecuted cells across a pool of suspended carries — the size of
+    the global (request, segment, layer) grid still to run. ``steps`` and
+    ``segment_counts`` are parallel per-member lists."""
+    assert len(steps) == len(segment_counts)
+    return sum(S * n_layers - cells_completed(st, S, n_layers)
+               for st, S in zip(steps, segment_counts))
+
+
+# ---------------------------------------------------------------------------
 # Stack layout
 # ---------------------------------------------------------------------------
 

@@ -58,9 +58,21 @@ def main():
                          "every slot for the whole prompt; 0 = legacy "
                          "blocking admission")
     ap.add_argument("--fused-admission", action="store_true",
-                    help="run the admission's diagonal groups inside the "
+                    help="run the admissions' diagonal groups inside the "
                          "same jitted launch as the decode chunk (one "
                          "dispatch per chunk interval)")
+    ap.add_argument("--max-concurrent-admissions", type=int, default=None,
+                    help="pooled concurrent admissions (DESIGN.md §12): up "
+                         "to this many interleaved admissions in flight at "
+                         "once, same-signature prefill carries batched into "
+                         "one pooled launch per round; default None bounds "
+                         "the pool only by free slots, 1 restores the "
+                         "single-admission behavior")
+    ap.add_argument("--admission-fairness", default="round_robin",
+                    choices=["round_robin", "oldest_first"],
+                    help="group-budget policy across in-flight admissions: "
+                         "round_robin advances every carry k groups per "
+                         "round; oldest_first is head-of-line")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="segment-granular prefix cache: requests share a "
                          "system prompt; admission transplants the cached "
@@ -151,7 +163,9 @@ def main():
                 reqs, n_slots=args.slots, chunk=args.chunk,
                 max_queue=args.max_queue,
                 prefill_groups_per_chunk=args.prefill_groups_per_chunk,
-                fused_admission=args.fused_admission):
+                fused_admission=args.fused_admission,
+                max_concurrent_admissions=args.max_concurrent_admissions,
+                admission_fairness=args.admission_fairness):
             if isinstance(ev, RequestError):
                 print(f"{ev.req_id}: REJECTED [{ev.code}] {ev.message}")
                 continue
@@ -164,9 +178,12 @@ def main():
                       f"first 8: {outs[ev.req_id][:8]}")
         dt = time.perf_counter() - t0
         k = args.prefill_groups_per_chunk
+        n_conc = args.max_concurrent_admissions
         adm = ("blocking" if k == 0 else
                "blocking(jitted stepper, whole stage per advance)" if k < 0
                else f"interleaved(k={k}"
+                    f", N={'slots' if n_conc is None else n_conc}"
+                    f", {args.admission_fairness}"
                     f"{', fused' if args.fused_admission else ''})")
         print(f"arch={cfg.name} mode={args.serve_mode} slots={args.slots} "
               f"requests={args.requests} admission={adm}")

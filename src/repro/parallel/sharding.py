@@ -381,5 +381,34 @@ def pipeline_carry_specs(carry_shape: Any, mesh: Mesh, n_layers: int,
     return out
 
 
+def pool_carry_specs(carry_pool: Any, mesh: Mesh, n_layers: int,
+                     batch: int, *,
+                     stacked_axis: Optional[str] = None) -> Any:
+    """NamedShardings for a POOLED admission carry (DESIGN.md §12): every
+    leaf of ``carry_pool`` leads with a pool axis [n_pool, ...] stacking N
+    same-shape B=1 admission carries (``core.diagonal.pipeline_step_pool``).
+
+    The pool axis is REPLICATED; within a member the layout is exactly
+    ``pipeline_carry_specs`` (model/stage axes still shard). Sharding the
+    pool axis over the DP axes is deliberately left on the table: a
+    member's state leaves are model-sharded on their last dims, and
+    stacking them under a data-sharded leading axis forces XLA's SPMD
+    partitioner into "involuntary full rematerialization" reshards at the
+    stack/unstack reshapes — observed to MISCOMPILE (≈3e-1 divergence) on
+    multi-device CPU. Admissions are B=1 carries, so the DP win would be
+    marginal anyway. ``carry_pool`` may be a tree of ShapeDtypeStructs or
+    traced values (specs only read shapes), so the pooled stepper can
+    build its constraint tree at trace time. ``xs`` is not part of a
+    carry pool (read-only, never donated) — only the carry keys are
+    returned."""
+    member = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), carry_pool)
+    base = pipeline_carry_specs(member, mesh, n_layers, batch,
+                                stacked_axis=stacked_axis)
+    base.pop("xs")
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, P(None, *s.spec)), base)
+
+
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())

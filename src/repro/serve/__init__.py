@@ -1,4 +1,4 @@
-from repro.serve.engine import (ServeEngine, GenerationResult,
+from repro.serve.engine import (AdmissionPool, ServeEngine, GenerationResult,
                                 PrefillPipeline)
 from repro.serve.scheduler import (ContinuousScheduler, Request, RequestError,
                                    StreamEvent)

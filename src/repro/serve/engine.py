@@ -114,6 +114,11 @@ class GenerationResult:
     cached_segments: int = 0    # segments transplanted from the prefix cache
     session_id: Optional[str] = None
     resumed: bool = False       # True when restored from the session store
+    # queue-wait breakdown, mirroring StreamEvent (DESIGN.md §12): direct
+    # generate() calls never queue, so these stay at their idle defaults —
+    # they exist so result records from both front doors aggregate uniformly
+    queue_wait_s: float = 0.0
+    concurrent_admissions: int = 1
 
 
 class ServeEngine:
@@ -202,6 +207,10 @@ class ServeEngine:
         #                              prefill_step (resumable pipeline §11)
         self._fused_fns: Dict = {}   # (chunk, S, capture, k) -> fused
         #                              decode-chunk + prefill-step program
+        #                              (and pooled variants, §12 — keyed
+        #                              ('pool', chunk, bucket-signatures))
+        self._pool_steps: Dict = {}  # (S, B, capture, k, n_pool) -> jitted
+        #                              pooled stepper (admission pool §12)
 
     # ------------------------------------------------------------------
     # Mesh placement (DESIGN.md §10) — no-ops on a mesh-less engine
@@ -413,6 +422,95 @@ class ServeEngine:
         self._pipe_steps[key] = jax.jit(step, donate_argnums=donate)
         return self._pipe_steps[key]
 
+    def _pool_step_body(self, n_segments: int, batch: int, capture: bool,
+                        n_groups: int, n_pool: int):
+        """The pooled-stepper body as a pure (un-jitted) function
+        ``(params, xs_tuple, carry_tuple) -> carry_tuple`` over ``n_pool``
+        same-signature admission carries — the single source of truth
+        shared by the standalone jitted stepper (``pool_prefill_step``)
+        and the fused global-grid launch (scheduler.fused_pool_fns).
+
+        Stacking/unstacking happens INSIDE the traced body (tuples in,
+        tuples out): one dispatch per round, and each member's output is
+        its own buffer — unstacked members never alias each other, so
+        handing them back to their pipelines is donation-safe."""
+        layout = StackLayout.from_config(self.cfg)
+        apply, gapply = self.exec_apply()
+        mesh, stacked_axis = self.mesh, self.stacked_axis
+        del capture                       # implied by the carry structure
+
+        def body(params, xs_tup, carry_tup):
+            exec_params = {"prelude": params["prelude"],
+                           "pattern": params["pattern"]}
+            xs_pool = jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *xs_tup)
+            carry_pool = jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *carry_tup)
+            pool_spec = None
+            if mesh is not None:
+                pool_spec = shd.pool_carry_specs(
+                    carry_pool, mesh, layout.n_layers, batch,
+                    stacked_axis=stacked_axis)
+            carry_pool = diag.pipeline_step_pool(
+                layout, exec_params, xs_pool, carry_pool, apply,
+                n_groups=n_groups, grouped_apply=gapply,
+                pool_spec=pool_spec)
+            return tuple(
+                jax.tree_util.tree_map(lambda a, _i=i: a[_i], carry_pool)
+                for i in range(n_pool))
+
+        return body
+
+    def pool_prefill_step(self, n_segments: int, batch: int, capture: bool,
+                          n_groups: int, n_pool: int):
+        """The jitted pooled stepper (DESIGN.md §12): one launch advances
+        ``n_pool`` same-signature admission carries by ``n_groups`` groups
+        each. Pool sizes are pow2-bucketed by the caller (``pool_pack``),
+        so the cache holds O(log N) programs per (S, capture, k) on top of
+        the single-carry stepper's O(log) stage buckets.
+
+        The carry tuple is DONATED on backends that honor donation — every
+        entry (including pad members) must be fresh-buffered and pairwise
+        non-aliased (see diag.pipeline_pool_pad)."""
+        key = (n_segments, batch, capture, n_groups, n_pool)
+        if key in self._pool_steps:
+            return self._pool_steps[key]
+        body = self._pool_step_body(n_segments, batch, capture, n_groups,
+                                    n_pool)
+        donate = (2,) if jax.default_backend() != "cpu" else ()
+        self._pool_steps[key] = jax.jit(body, donate_argnums=donate)
+        return self._pool_steps[key]
+
+    def pool_pack(self, n_segments: int, group):
+        """Pad a same-signature admission group — ``[(pipe, xs, carry),
+        ...]`` — up to its pow2 pool bucket: returns ``(n_pool, xs_tuple,
+        carry_tuple)`` with fresh zero no-op pad members (cursor parked
+        past the grid, diag.pipeline_pool_pad)."""
+        n = len(group)
+        n_pool = 1 << (n - 1).bit_length() if n > 1 else 1
+        xs_t = tuple(x for _, x, _ in group)
+        carry_t = tuple(c for _, _, c in group)
+        n_steps = n_diagonal_groups(n_segments, self._n_layers)
+        for _ in range(n_pool - n):
+            px, pc = diag.pipeline_pool_pad(xs_t[0], carry_t[0], n_steps)
+            xs_t += (px,)
+            carry_t += (pc,)
+        return n_pool, xs_t, carry_t
+
+    def pool_prefill_step_run(self, n_segments: int, capture: bool,
+                              n_groups: int, group):
+        """Advance every member of ``group`` (same (S, capture, k)
+        signature, B=1 admissions) by ``n_groups`` diagonal groups in ONE
+        jitted launch; returns the new carries in member order. The input
+        carries are donated — callers must treat them as consumed and keep
+        only the returned ones (AdmissionPool does)."""
+        n_pool, xs_t, carry_t = self.pool_pack(n_segments, group)
+        step = self.pool_prefill_step(n_segments, 1, capture, n_groups,
+                                      n_pool)
+        with self._mesh_ctx():
+            out = step(self.params, xs_t, carry_t)
+        return list(out[:len(group)])
+
     def start_prefill(self, prompts: jax.Array, *,
                       groups_per_call: Optional[int] = 4,
                       session_entry=None) -> "PrefillPipeline":
@@ -567,7 +665,9 @@ class ServeEngine:
     def serve(self, requests: Iterable, *, n_slots: int = 4,
               chunk: int = 8, max_queue: Optional[int] = None,
               prefill_groups_per_chunk: int = 4,
-              fused_admission: bool = False) -> Iterator:
+              fused_admission: bool = False,
+              max_concurrent_admissions: Optional[int] = None,
+              admission_fairness: str = "round_robin") -> Iterator:
         """Continuous-batching streaming front door: admit `Request`s into a
         fixed pool of decode slots and yield `StreamEvent`s as tokens are
         produced. Rejections (queue-full, invalid request, evicted session)
@@ -580,12 +680,21 @@ class ServeEngine:
         decode chunk instead of blocking every slot for its whole prompt;
         0 restores the legacy blocking admission. fused_admission: run the
         admission's diagonal groups inside the same jitted launch as the
-        decode chunk (one dispatch per interval)."""
+        decode chunk (one dispatch per interval).
+
+        max_concurrent_admissions: cap on interleaved admissions in flight
+        at once (DESIGN.md §12); None (default) bounds the pool only by
+        free slots, 1 restores the PR 5 single-admission behavior.
+        admission_fairness: 'round_robin' (default — every in-flight
+        admission advances k groups per round, same-signature carries
+        pooled into one launch) or 'oldest_first' (head-of-line)."""
         from repro.serve.scheduler import ContinuousScheduler
         sched = ContinuousScheduler(
             self, n_slots=n_slots, chunk=chunk, max_queue=max_queue,
             prefill_groups_per_chunk=prefill_groups_per_chunk,
-            fused_admission=fused_admission)
+            fused_admission=fused_admission,
+            max_concurrent_admissions=max_concurrent_admissions,
+            admission_fairness=admission_fairness)
         return sched.run(requests)
 
 
@@ -882,5 +991,111 @@ class PrefillPipeline:
         if self._stage >= len(self._stages):
             self._finish()
         return self._done
+
+
+class AdmissionPool:
+    """N concurrent resumable admissions advanced together (DESIGN.md §12).
+
+    Generalizes §11's single suspended PrefillPipeline to a FIFO pool:
+    each fairness round every member advances one bounded unit — its
+    ``groups_per_call`` anti-diagonal groups or one tail piece — and the
+    members whose active unit is a diagonal stage of the SAME
+    (n_segments, capture, k) signature ride ONE pooled jitted launch
+    (``ServeEngine.pool_prefill_step``): their carries stack on a leading
+    pool axis, per-carry cursors keep heterogeneous progress exact (masked
+    overshoot), and the pool size pads to a power of two so the compile
+    count stays O(log N) per signature. Per-member host state — prefix
+    cache match/insert, session resume, tail bucketing, boundary logits —
+    lives in each PrefillPipeline unchanged: pooling batches DEVICE work
+    only, so every member is token-identical to its own one-at-a-time
+    pipeline by construction.
+
+    Donation safety: the pooled stepper donates the carry tuple, so member
+    carries are consumed by ``advance_round`` and replaced via
+    ``apply_diag_result`` — nothing else may hold the old arrays (the same
+    contract the single-carry stepper already imposes; pads are fresh
+    zeros, never aliases)."""
+
+    def __init__(self, engine: ServeEngine):
+        self.engine = engine
+        self.members: List[PrefillPipeline] = []      # FIFO admission order
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+    def add(self, pipe: PrefillPipeline) -> None:
+        self.members.append(pipe)
+
+    def grid_cells_remaining(self) -> int:
+        """Unexecuted (segment, layer) cells across every member's
+        remaining diagonal stages — the pool's share of the global grid.
+        Host-side cursors only (never syncs a device carry)."""
+        from repro.core.schedule import pool_cells_remaining
+        L = self.engine._n_layers
+        total = 0
+        for pipe in self.members:
+            steps, segs = [], []
+            for idx, st in enumerate(pipe._stages[pipe._stage:]):
+                if st[0] != "diag":
+                    continue
+                segs.append(st[2])
+                steps.append(pipe._groups_done
+                             if idx == 0 and pipe._carry is not None else 0)
+            total += pool_cells_remaining(steps, segs, L)
+        return total
+
+    def diag_buckets(self):
+        """Group members whose next unit is a diagonal stage by pooled-
+        launch signature: ``{(n_segments, capture, k): [(pipe, xs, carry),
+        ...]}`` in member (FIFO) order. Members at a tail piece (or done)
+        are absent — they advance individually."""
+        buckets: Dict = {}
+        for pipe in self.members:
+            ad = pipe.active_diag()
+            if ad is None:
+                continue
+            g, capture, xs, carry = ad
+            sig = (g, capture, pipe._groups_per_advance())
+            buckets.setdefault(sig, []).append((pipe, xs, carry))
+        return buckets
+
+    def advance_round(self, *, already_advanced=()):
+        """One fairness round: every member advances one bounded unit.
+        Same-signature diagonal groups of >= 2 members ride one pooled
+        launch; singletons and tail pieces advance individually (the PR 5
+        single-carry programs). ``already_advanced``: ids of pipes a fused
+        scheduler launch advanced this round — they are skipped here.
+        Returns the members that completed, FIFO, removed from the pool."""
+        advanced = set(already_advanced)
+        for sig, group in self.diag_buckets().items():
+            group = [g for g in group if id(g[0]) not in advanced]
+            if len(group) < 2:
+                continue
+            g_segs, capture, k = sig
+            carries = self.engine.pool_prefill_step_run(
+                g_segs, capture, k, group)
+            for (pipe, _, _), c in zip(group, carries):
+                pipe.apply_diag_result(c)
+                advanced.add(id(pipe))
+        done = []
+        for pipe in list(self.members):
+            if id(pipe) in advanced:
+                if pipe.done:
+                    done.append(pipe)
+            elif pipe.advance():
+                done.append(pipe)
+        for pipe in done:
+            self.members.remove(pipe)
+        return done
+
+    def advance_oldest(self):
+        """Head-of-line fairness (``admission_fairness='oldest_first'``):
+        only the oldest member advances this round — the reference policy
+        the round-robin default is contrasted against in tests/bench."""
+        pipe = self.members[0]
+        if pipe.advance():
+            self.members.remove(pipe)
+            return [pipe]
+        return []
 
 

@@ -21,16 +21,32 @@ decode chunks, so a 128k-token admission no longer freezes every decoding
 slot for its whole prompt — the last head-of-line block the diagonal
 schedule left in the serving stack. ``prefill_groups_per_chunk=0`` restores
 the legacy blocking admission (one ``ServeEngine._prefill`` call); with
-``fused_admission=True`` the admitting request's segment-cells ride the
+``fused_admission=True`` the admitting requests' segment-cells ride the
 same jitted launch as the decode cells (one combined program per chunk
-interval, ``fused_fns``). Either way the finished B=1 state is
-transplanted into a free slot of the pool with ``.at[slot].set`` — other
-slots keep decoding across admissions (their rows are untouched), and the
-admission itself is token-identical (greedy) to the blocking path
+interval, ``fused_fns`` / ``fused_pool_fns``). Either way the finished B=1
+state is transplanted into a free slot of the pool with ``.at[slot].set``
+— other slots keep decoding across admissions (their rows are untouched),
+and the admission itself is token-identical (greedy) to the blocking path
 (tests/test_serve_interleave.py). With a prefix cache on the engine,
 admission prefills only the uncached tail segments; with a session store,
 a request carrying a known ``session_id`` transplants the stored
 conversation state and feeds only the new turn (O(new turn) admission).
+
+Up to ``max_concurrent_admissions`` admissions are in flight at once
+(DESIGN.md §12; default None = bounded only by free slots): each holds a
+reserved slot and a suspended carry, and every scheduler round is one
+*global* (request, segment, layer) work set — k ready diagonal groups from
+EACH in-flight admission plus the packed decode chunk. Same-signature
+carries batch into one pooled stepper launch (engine.AdmissionPool), and
+with ``fused_admission`` the whole round — decode chunk plus every pooled
+bucket — is ONE jitted program. Fairness is round-robin by default (every
+admission advances k groups per round; slots assigned FIFO at start, so no
+admission starves); ``admission_fairness='oldest_first'`` is the
+head-of-line reference policy. Queue wait (``t_admit - t_submit``) and the
+concurrent-admission count are recorded per request on its StreamEvents.
+When no decode slot is active, pending admissions drain in a tight loop
+(no per-round scheduling-pass overhead) until a transplant reactivates
+decode or a new request could start.
 
 Requests are pulled from the ``requests`` iterable *lazily between
 chunks* — a live/streaming source is served as it arrives instead of being
@@ -116,6 +132,14 @@ class StreamEvent:
     ttft_s: Optional[float] = None
     tok_s: Optional[float] = None
     t_emit: Optional[float] = None
+    # queue-wait breakdown (DESIGN.md §12), set on first and final events:
+    # t_admit - t_submit is the time the request sat queued before its
+    # admission started (the component concurrent admissions attack —
+    # ttft_s = queue_wait_s + service time), and concurrent_admissions is
+    # how many admissions were in flight when this one started (its own
+    # included; 1 = it had the admission machinery to itself).
+    queue_wait_s: Optional[float] = None
+    concurrent_admissions: Optional[int] = None
 
 
 @dataclass
@@ -141,13 +165,16 @@ class _Slot:
     t_submit: float = 0.0
     t_admit: float = 0.0
     t_first: Optional[float] = None
+    n_concurrent: int = 1        # admissions in flight when this one started
 
 
 @dataclass
 class _Admission:
-    """Host record of the (single) in-flight interleaved admission: the
-    suspended prefill pipeline plus the slot it has reserved and the
-    metadata the transplant needs on completion."""
+    """Host record of one in-flight interleaved admission: the suspended
+    prefill pipeline plus the slot it has reserved and the metadata the
+    transplant needs on completion. The scheduler keeps a FIFO list of
+    these (up to ``max_concurrent_admissions``), mirrored by the engine's
+    AdmissionPool which batches their device work (DESIGN.md §12)."""
     req: Request
     slot: int
     pipe: object                 # serve.engine.PrefillPipeline
@@ -155,6 +182,7 @@ class _Admission:
     prompt: np.ndarray
     t_submit: float
     t_admit: float
+    n_concurrent: int = 1
 
 
 class ContinuousScheduler:
@@ -163,15 +191,22 @@ class ContinuousScheduler:
     def __init__(self, engine, *, n_slots: int = 4, chunk: int = 8,
                  max_queue: Optional[int] = None,
                  prefill_groups_per_chunk: int = 4,
-                 fused_admission: bool = False):
+                 fused_admission: bool = False,
+                 max_concurrent_admissions: Optional[int] = None,
+                 admission_fairness: str = "round_robin"):
         from repro.models import decode_state_init
+        from repro.serve.engine import AdmissionPool
         assert n_slots >= 1 and chunk >= 1
         assert prefill_groups_per_chunk >= -1
+        assert (max_concurrent_admissions is None
+                or max_concurrent_admissions >= 1), max_concurrent_admissions
+        assert admission_fairness in ("round_robin", "oldest_first"), \
+            admission_fairness
         self.engine = engine
         self.n_slots = n_slots
         self.chunk = chunk
         self.max_queue = max_queue
-        # interleaved admission (DESIGN.md §11): diagonal groups the
+        # interleaved admission (DESIGN.md §11): diagonal groups each
         # admitting request's pipeline advances per decode chunk; 0 =
         # legacy blocking admission (one eager _prefill call); -1 = one
         # whole diagonal stage per chunk (blocking semantics for
@@ -179,7 +214,17 @@ class ContinuousScheduler:
         # bench's fair blocking baseline)
         self.prefill_groups_per_chunk = prefill_groups_per_chunk
         self.fused_admission = fused_admission
-        self._adm: Optional[_Admission] = None
+        # pooled concurrent admissions (DESIGN.md §12): up to this many
+        # interleaved admissions in flight at once, each holding a reserved
+        # slot; None bounds the pool only by free slots, 1 restores the
+        # PR 5 single-admission behavior (and its exact compiled programs)
+        self.max_concurrent_admissions = max_concurrent_admissions
+        self.admission_fairness = admission_fairness
+        self._adms: List[_Admission] = []            # FIFO
+        self._pool_adm = AdmissionPool(engine)
+        # idle-drain observability: rounds run inside the tight loop that
+        # drains pending admissions while no decode slot is active
+        self.idle_drain_rounds = 0
         # (t_start, t_end) of every completed admission — the bench reads
         # these to compute admission_stall (max decode gap overlapping an
         # admission window)
@@ -279,12 +324,12 @@ class ContinuousScheduler:
             logits, one_state, pos, _cached = self.engine._prefill(
                 prompt[None])
         self._install(slot, req, entry, prompt, logits, one_state, pos,
-                      t_submit, t_admit)
+                      t_submit, t_admit, n_concurrent=1)
         return None
 
     def _install(self, slot: int, req: Request, entry, prompt: np.ndarray,
                  logits, one_state, pos: int, t_submit: float,
-                 t_admit: float) -> None:
+                 t_admit: float, n_concurrent: int = 1) -> None:
         """Transplant a finished admission into its slot — the single
         completion path shared by blocking (_admit) and interleaved
         (_finish_admission) admission, so the two modes cannot drift
@@ -301,6 +346,7 @@ class ContinuousScheduler:
         s.history = (entry.tokens if entry is not None
                      else np.empty(0, np.int32))
         s.t_submit, s.t_admit, s.t_first = t_submit, t_admit, None
+        s.n_concurrent = n_concurrent
         self.admission_windows.append((t_admit, time.perf_counter()))
 
     def _interleave(self) -> bool:
@@ -312,12 +358,20 @@ class ContinuousScheduler:
         eng = self.engine
         return eng.schedule == "diagonal" or eng.serve_mode != "armt"
 
+    def _can_admit(self) -> bool:
+        """Room for another admission to START (a free slot is checked by
+        the caller). Blocking admissions are synchronous, so ``_adms`` is
+        empty and they are never capped; interleaved admissions respect
+        ``max_concurrent_admissions``."""
+        return (self.max_concurrent_admissions is None
+                or len(self._adms) < self.max_concurrent_admissions)
+
     def _start(self, req: Request, t_submit: float) -> Optional[RequestError]:
         """Begin serving ``req``: the full blocking admission when
         interleaving is off/unavailable, else reserve a slot and suspendably
-        prefill via the engine's pipeline (advanced between chunks by
-        ``run``). Returns a RequestError instead of starting when
-        rejected."""
+        prefill via the engine's pipeline — the new member joins the
+        admission pool and advances every fairness round (``run``).
+        Returns a RequestError instead of starting when rejected."""
         if not self._interleave():
             return self._admit(req, t_submit)
         err = self._validate(req)
@@ -337,19 +391,100 @@ class ContinuousScheduler:
         pipe = self.engine.start_prefill(
             prompt[None], groups_per_call=(None if k < 0 else k),
             session_entry=entry)
-        self._adm = _Admission(req=req, slot=slot, pipe=pipe, entry=entry,
-                               prompt=prompt, t_submit=t_submit,
-                               t_admit=t_admit)
+        self._adms.append(_Admission(
+            req=req, slot=slot, pipe=pipe, entry=entry, prompt=prompt,
+            t_submit=t_submit, t_admit=t_admit,
+            n_concurrent=len(self._adms) + 1))
+        self._pool_adm.add(pipe)
         return None
 
-    def _finish_admission(self) -> None:
-        """The in-flight pipeline completed: transplant its B=1 state into
-        the reserved slot (identical to blocking admission from here)."""
-        adm = self._adm
-        logits, one_state, pos, _cached = adm.pipe.result()
-        self._install(adm.slot, adm.req, adm.entry, adm.prompt, logits,
-                      one_state, pos, adm.t_submit, adm.t_admit)
-        self._adm = None
+    def _finish_admissions(self, done_pipes) -> None:
+        """Pipelines that completed this round: transplant each B=1 state
+        into its reserved slot, FIFO (identical to blocking admission from
+        here)."""
+        for pipe in done_pipes:
+            adm = next(a for a in self._adms if a.pipe is pipe)
+            logits, one_state, pos, _cached = pipe.result()
+            self._install(adm.slot, adm.req, adm.entry, adm.prompt, logits,
+                          one_state, pos, adm.t_submit, adm.t_admit,
+                          n_concurrent=adm.n_concurrent)
+            self._adms.remove(adm)
+
+    def _fused_round(self):
+        """The global-grid launch (DESIGN.md §12): ONE jitted program runs
+        the packed decode chunk over every slot plus k diagonal groups from
+        every pooled admission bucket. Returns ``(toks, masks, advanced)``
+        — the chunk's outputs and the ids of pipes the launch advanced
+        (tail-piece members are not in any bucket and advance individually
+        afterwards)."""
+        buckets = self._pool_adm.diag_buckets()
+        if not buckets:
+            return None, None, frozenset()
+        order = sorted(buckets.keys())        # deterministic compile key
+        sigs, xs_b, carry_b, groups = [], [], [], []
+        for sig in order:
+            g_segs, capture, k = sig
+            group = buckets[sig]
+            n_pool, xs_t, carry_t = self.engine.pool_pack(g_segs, group)
+            sigs.append((g_segs, capture, k, n_pool))
+            xs_b.append(xs_t)
+            carry_b.append(carry_t)
+            groups.append(group)
+        ffn = fused_pool_fns(self.engine, self.chunk, tuple(sigs))
+        with self.engine._mesh_ctx():
+            (self.pool, self.tok, self.active, self.remaining, toks, masks,
+             out_b) = ffn(self.engine.params, self.pool, self.tok,
+                          self.active, self.remaining, tuple(xs_b),
+                          tuple(carry_b))
+        advanced = set()
+        for group, outs in zip(groups, out_b):
+            for (pipe, _, _), c in zip(group, outs):
+                pipe.apply_diag_result(c)
+                advanced.add(id(pipe))
+        return toks, masks, frozenset(advanced)
+
+    def _advance_admissions(self):
+        """One fairness round over the in-flight admissions: every member
+        advances one bounded unit — its k diagonal groups (same-signature
+        members batched into one pooled launch) or one tail piece. With
+        ``fused_admission`` and active decode slots, the decode chunk and
+        every bucket's pooled groups run as ONE jitted program
+        (``fused_pool_fns``); the single-admission case keeps PR 5's
+        ``fused_fns`` path (same compiled programs). Completed admissions
+        transplant FIFO into their reserved slots. Returns ``(toks,
+        masks)`` when the fused launch ran the decode chunk, else
+        ``(None, None)``."""
+        toks = masks = None
+        run_fused = self.fused_admission and any(s.active for s in self.slots)
+        if self.admission_fairness == "oldest_first" and len(self._adms) > 1:
+            done_pipes = self._pool_adm.advance_oldest()
+        elif len(self._adms) == 1:
+            # PR 5 single-carry path bit for bit (and its compiled programs)
+            pipe = self._adms[0].pipe
+            fused = pipe.active_diag() if run_fused else None
+            if fused is not None:
+                g, capture, xs, carry = fused
+                ffn = fused_fns(self.engine, self.chunk, g, capture,
+                                pipe._groups_per_advance())
+                with self.engine._mesh_ctx():
+                    (self.pool, self.tok, self.active, self.remaining,
+                     toks, masks, carry) = ffn(
+                        self.engine.params, self.pool, self.tok,
+                        self.active, self.remaining, xs, carry)
+                done = pipe.apply_diag_result(carry)
+            else:
+                done = pipe.advance()
+            done_pipes = [pipe] if done else []
+            if done:
+                self._pool_adm.members.remove(pipe)
+        else:
+            advanced = frozenset()
+            if run_fused:
+                toks, masks, advanced = self._fused_round()
+            done_pipes = self._pool_adm.advance_round(
+                already_advanced=advanced)
+        self._finish_admissions(done_pipes)
+        return toks, masks
 
     def _persist_session(self, b: int) -> None:
         """End of generation for slot b: lift its row out of the pool
@@ -384,6 +519,9 @@ class ContinuousScheduler:
                 if first:
                     s.t_first = now
                 ev = StreamEvent(s.req_id, tok, s.index, done, t_emit=now)
+                if first or done:
+                    ev.queue_wait_s = s.t_admit - s.t_submit
+                    ev.concurrent_admissions = s.n_concurrent
                 if first:
                     ev.ttft_s = now - s.t_submit
                 if done:
@@ -435,14 +573,14 @@ class ContinuousScheduler:
         queue: deque = deque()           # (request, t_submit-at-pull)
         while True:
             # ---- start work: backlog first, then pull from the source ----
-            while self.free and queue and self._adm is None:
+            while self.free and queue and self._can_admit():
                 req, t_sub = queue.popleft()
                 err = self._start(req, t_sub)
                 if err is not None:
                     yield err
             while not exhausted:
                 can_start = (bool(self.free) and not queue
-                             and self._adm is None)
+                             and self._can_admit())
                 if not can_start and self.max_queue is None:
                     # pull model: backpressure by not pulling — nothing is
                     # read from a live source until we can actually start it
@@ -451,8 +589,9 @@ class ContinuousScheduler:
                         and len(queue) >= self.max_queue + len(self.free)):
                     # push model at capacity: drain + structured rejection.
                     # Free slots count as extra queue capacity — a slot left
-                    # idle only because another admission is in flight will
-                    # serve its queued request as soon as that one lands
+                    # idle only because the admission pool is at its
+                    # concurrency cap will serve its queued request as soon
+                    # as a pooled admission lands
                     req = pull()
                     if req is None:
                         break
@@ -472,29 +611,10 @@ class ContinuousScheduler:
                 else:
                     queue.append((req, t_sub))
 
-            # ---- advance the in-flight admission by one bounded unit ----
+            # ---- one fairness round over the in-flight admissions ----
             toks = masks = None
-            if self._adm is not None:
-                pipe = self._adm.pipe
-                fused = None
-                if self.fused_admission and any(s.active for s in self.slots):
-                    fused = pipe.active_diag()
-                if fused is not None:
-                    # one combined launch: the decode chunk and k diagonal
-                    # groups of the admitting prefill in a single program
-                    g, capture, xs, carry = fused
-                    ffn = fused_fns(self.engine, self.chunk, g, capture,
-                                    pipe._groups_per_advance())
-                    with self.engine._mesh_ctx():
-                        (self.pool, self.tok, self.active, self.remaining,
-                         toks, masks, carry) = ffn(
-                            self.engine.params, self.pool, self.tok,
-                            self.active, self.remaining, xs, carry)
-                    done = pipe.apply_diag_result(carry)
-                else:
-                    done = pipe.advance()
-                if done:
-                    self._finish_admission()
+            if self._adms:
+                toks, masks = self._advance_admissions()
 
             # ---- decode chunk (unless the fused launch already ran it) ----
             if toks is None and any(s.active for s in self.slots):
@@ -504,7 +624,21 @@ class ContinuousScheduler:
                     self.active, self.remaining)
             if toks is not None:
                 yield from self._drain_chunk(toks, masks)
-            elif self._adm is None:
+            elif self._adms:
+                # idle-drain: no decode slot is active, so there is no
+                # chunk to interleave against — drain the pending
+                # admissions in a tight loop instead of one k-group round
+                # per full scheduling pass. Break out as soon as a
+                # transplant lands (decode can resume) or a new request
+                # could start (the pull loop must run — a free slot plus
+                # pool headroom while the source may still have requests).
+                while (self._adms
+                       and not any(s.active for s in self.slots)
+                       and not (self.free and self._can_admit()
+                                and (queue or not exhausted))):
+                    self._advance_admissions()
+                    self.idle_drain_rounds += 1
+            else:
                 if not queue and exhausted:
                     return
                 if not queue:
@@ -635,6 +769,42 @@ def fused_fns(engine, chunk: int, n_segments: int, capture: bool, k: int):
                                    n_groups=k, buf_spec=buf_spec,
                                    grouped_apply=gapply)
         return state, tok, active, remaining, toks, masks, carry
+
+    donate = (1, 2, 3, 4, 6) if jax.default_backend() != "cpu" else ()
+    cache[key] = jax.jit(fused, donate_argnums=donate)
+    return cache[key]
+
+
+def fused_pool_fns(engine, chunk: int, sigs: tuple):
+    """Jitted GLOBAL-GRID program (DESIGN.md §12): one launch runs the
+    packed decode chunk over every slot AND k anti-diagonal groups from
+    every pooled admission bucket — the whole round's ready cells, decode
+    and N admissions alike, in a single dispatch (the N-carry
+    generalization of ``fused_fns``).
+
+    ``sigs`` is the per-bucket signature tuple ``((n_segments, capture, k,
+    n_pool), ...)``; the program takes (and returns) one
+    ``(xs_tuple, carry_tuple)`` pair per bucket, each tuple pow2-padded to
+    its ``n_pool`` (engine.pool_pack), so the compile count is bounded by
+    the pow2 bucketing of both stage sizes and pool sizes times the few
+    bucket combinations a workload actually produces. Donates the
+    pool/control vectors and every carry tuple (never the read-only xs) on
+    backends that honor donation."""
+    key = ("pool", chunk) + tuple(sigs)
+    cache = engine._fused_fns
+    if key in cache:
+        return cache[key]
+    chunk_body = _chunk_body_factory(engine.cfg, engine.serve_mode,
+                                     engine.seg_len, chunk)
+    bodies = [engine._pool_step_body(g, 1, capture, k, n_pool)
+              for (g, capture, k, n_pool) in sigs]
+
+    def fused(params, state, tok, active, remaining, xs_bkts, carry_bkts):
+        state, tok, active, remaining, toks, masks = chunk_body(
+            params, state, tok, active, remaining)
+        out_bkts = tuple(body(params, xs_t, carry_t) for body, xs_t, carry_t
+                         in zip(bodies, xs_bkts, carry_bkts))
+        return state, tok, active, remaining, toks, masks, out_bkts
 
     donate = (1, 2, 3, 4, 6) if jax.default_backend() != "cpu" else ()
     cache[key] = jax.jit(fused, donate_argnums=donate)

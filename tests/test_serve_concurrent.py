@@ -1,0 +1,409 @@
+"""Pooled concurrent admissions (DESIGN.md §12): N in-flight prefill
+carries advance as one global (request, segment, layer) diagonal grid
+unified with decode. Covers the core pooled stepper (bit-exact vs
+per-carry stepping at heterogeneous cursors, pads are no-ops), token
+identity vs the blocking path across N / fairness policies / mixed
+admission phases, round-robin no-starvation under a burst, the carry-pool
+donation/aliasing regression, the idle-drain tight loop, and an
+8-fake-device mesh parity subprocess (slow-marked)."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import diagonal as D
+from repro.core.schedule import (StackLayout, cells_completed, group_size,
+                                 groups_remaining, n_diagonal_groups,
+                                 pool_cells_remaining)
+from repro.models import init_params, init_state
+from repro.models.blocks import make_apply_block
+from repro.serve import (AdmissionPool, ContinuousScheduler, PrefixCache,
+                         Request, ServeEngine, StreamEvent)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _toks(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(8, cfg.vocab, (n,)).astype(np.int32)
+
+
+def _requests(cfg, lens, max_new, seed=0):
+    return [Request(req_id=f"r{i}", prompt=_toks(cfg, L, seed=seed + i),
+                    max_new=max_new)
+            for i, L in enumerate(lens)]
+
+
+def _collect(events):
+    outs = {}
+    for ev in events:
+        assert isinstance(ev, StreamEvent), ev
+        outs.setdefault(ev.req_id, []).append(ev.token)
+    return outs
+
+
+def _leaf_ptrs(tree):
+    return {l.unsafe_buffer_pointer()
+            for l in jax.tree_util.tree_leaves(tree)
+            if isinstance(l, jax.Array)}
+
+
+# ---------------------------------------------------------------------------
+# Core: the pooled stepper is bit-exact at heterogeneous cursors
+# ---------------------------------------------------------------------------
+
+def test_pool_stepper_matches_single_stepper(setup):
+    """pipeline_step_pool == one pipeline_step per member (to float32
+    epsilon — vmap batches the matmuls, which reassociates the
+    reductions; greedy-token identity is asserted at the serve level),
+    with members at DIFFERENT cursors (one fresh, one mid-grid, one
+    overshot) plus a pow2 pad entry — and the pad stays an all-zero
+    no-op while its cursor churns past the grid."""
+    cfg, params = setup
+    layout = StackLayout.from_config(cfg)
+    apply = make_apply_block(cfg, mode="segmented", ssm_method="assoc")
+    ep = {"prelude": params["prelude"], "pattern": params["pattern"]}
+    S, B = 3, 1
+    T = cfg.armt.segment_len + cfg.armt.num_mem_tokens
+    n_steps = n_diagonal_groups(S, layout.n_layers)
+    st0 = init_state(cfg, B, "segmented", jnp.float32)
+
+    members = []
+    for i, pre_steps in enumerate((0, 2, n_steps)):   # fresh / mid / overshot
+        segs = jax.random.normal(jax.random.PRNGKey(10 + i),
+                                 (S, B, T, cfg.d_model))
+        xs, carry = D.pipeline_init(layout, st0, segs, capture_states=True)
+        if pre_steps:
+            carry = D.pipeline_step(layout, ep, xs, carry, apply,
+                                    n_groups=pre_steps)
+        members.append((xs, carry))
+    pad = D.pipeline_pool_pad(members[0][0], members[0][1], n_steps)
+    members.append(pad)
+
+    k = 2
+    refs = [D.pipeline_step(layout, ep, xs, carry, apply, n_groups=k)
+            for xs, carry in members[:3]]
+    xs_pool = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
+                                     *[m[0] for m in members])
+    carry_pool = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
+                                        *[m[1] for m in members])
+    out = D.pipeline_step_pool(layout, ep, xs_pool, carry_pool, apply,
+                               n_groups=k)
+    for i, ref in enumerate(refs):
+        got = jax.tree_util.tree_map(lambda a, _i=i: a[_i], out)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-5)
+    # the pad member: cursor advanced (fixed-shape scan) but every masked
+    # no-op left its buffers zero
+    pad_out = jax.tree_util.tree_map(lambda a: a[3], out)
+    assert int(pad_out["step"]) == n_steps + k
+    for key in ("buf", "ys", "cap"):
+        for leaf in jax.tree_util.tree_leaves(pad_out[key]):
+            assert not np.asarray(leaf).any(), key
+
+
+def test_global_grid_cursors():
+    """Host-side bookkeeping of the global (request, segment, layer) grid:
+    per-group cell counts, the saturating completed-cells cursor, and the
+    pool-level remaining-cells sum."""
+    S, L = 4, 3
+    n = n_diagonal_groups(S, L)
+    assert [group_size(i, S, L) for i in range(n)] == [1, 2, 3, 3, 2, 1]
+    assert sum(group_size(i, S, L) for i in range(n)) == S * L
+    assert cells_completed(0, S, L) == 0
+    assert cells_completed(2, S, L) == 3
+    assert cells_completed(n, S, L) == S * L
+    assert cells_completed(n + 5, S, L) == S * L      # overshoot saturates
+    assert [groups_remaining(i, S, L) for i in (0, 2, n, n + 5)] == \
+        [n, n - 2, 0, 0]
+    # a pool of three carries: fresh (4 segs), mid-grid (2 segs, 1 group
+    # in), exhausted (1 seg, overshot)
+    assert pool_cells_remaining([0, 1, 99], [4, 2, 1], L) == \
+        (4 * L) + (2 * L - cells_completed(1, 2, L)) + 0
+
+
+# ---------------------------------------------------------------------------
+# Token identity: pooled concurrent admissions vs blocking
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_conc", [2, 3, None])   # None = free-slot-bounded
+def test_concurrent_token_identity(setup, n_conc):
+    """Acceptance: N concurrent pooled admissions == blocking admission ==
+    single-request generate, token for token, across mixed admission
+    phases (mid-segment / boundary / tail-only prompts, more requests
+    than slots so admissions overlap decode)."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    lens = [2 * seg, 2 * seg + 1, seg - 1, 13, 3 * seg + seg // 2, 4 * seg]
+    max_new = 6
+    reqs = _requests(cfg, lens, max_new)
+    blocking = _collect(eng.serve(list(reqs), n_slots=3, chunk=4,
+                                  prefill_groups_per_chunk=0))
+    got = _collect(eng.serve(list(reqs), n_slots=3, chunk=4,
+                             prefill_groups_per_chunk=2,
+                             max_concurrent_admissions=n_conc))
+    assert got == blocking
+    for r in reqs:
+        ref = eng.generate(jnp.asarray(r.prompt)[None], max_new).tokens[0]
+        assert got[r.req_id] == ref.tolist(), r.req_id
+
+
+@pytest.mark.parametrize("kw", [
+    dict(fused_admission=True, max_concurrent_admissions=3),
+    dict(fused_admission=True),                    # free-slot-bounded pool
+    dict(admission_fairness="oldest_first"),
+    dict(prefill_groups_per_chunk=-1),             # whole-stage pooled units
+])
+def test_concurrent_modes_token_identity(setup, kw):
+    """The fused global-grid launch, the head-of-line fairness policy, and
+    whole-stage group budgets all stay token-identical to blocking with a
+    pool of concurrent admissions in flight."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    lens = [2 * seg, 2 * seg, seg + 3, 3 * seg + 5, 9]
+    reqs = _requests(cfg, lens, 6, seed=200)
+    blocking = _collect(eng.serve(list(reqs), n_slots=3, chunk=4,
+                                  prefill_groups_per_chunk=0))
+    kw.setdefault("prefill_groups_per_chunk", 2)
+    got = _collect(eng.serve(list(reqs), n_slots=3, chunk=4, **kw))
+    assert got == blocking, kw
+
+
+def test_concurrent_prefix_cache_identity(setup):
+    """Concurrent admissions sharing a cached prefix stay token-identical
+    to blocking. Cache HITS legitimately differ: members admitted into the
+    pool together race the first member's insert (blocking serializes, so
+    every follower hits), but a request admitted after the pool drains
+    still hits the freshly inserted prefix."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    sys_p = _toks(cfg, 2 * seg, seed=300)
+    prompts = [np.concatenate([sys_p, _toks(cfg, seg + 3, seed=301 + i)])
+               for i in range(4)]
+    stats, outs = {}, {}
+    for mode, kw in (("blocking", dict(prefill_groups_per_chunk=0)),
+                     ("pooled", dict(prefill_groups_per_chunk=2,
+                                     max_concurrent_admissions=3))):
+        cache = PrefixCache(seg, max_bytes=64 << 20)
+        eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                          prefix_cache=cache)
+        reqs = [Request(f"p{i}", p, 5) for i, p in enumerate(prompts)]
+        outs[mode] = _collect(eng.serve(reqs, n_slots=3, chunk=3, **kw))
+        st = cache.stats.as_dict()
+        stats[mode] = (st["hits"], st["insertions"], st["collisions"])
+    assert outs["pooled"] == outs["blocking"]
+    assert stats["blocking"][0] == 3        # p1..p3 all hit behind p0
+    assert stats["pooled"][0] >= 1          # p3 (post-pool) hits at least
+    assert stats["pooled"][2] == stats["blocking"][2] == 0   # no collisions
+
+
+# ---------------------------------------------------------------------------
+# Fairness / no-starvation and the queue-wait metric
+# ---------------------------------------------------------------------------
+
+def test_round_robin_no_starvation_under_burst(setup):
+    """A burst of long prompts with pool headroom: every burst member is
+    admitted immediately (queue wait ~ 0, concurrency reported on its
+    events) and completes; with the pool capped at 1 the same burst
+    serializes — later members queue for whole admissions, so the summed
+    queue wait is strictly larger. That gap is the metric the pooled
+    scheduler attacks."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+
+    def burst():
+        return ([Request("steady", _toks(cfg, 5, seed=400), 30)]
+                + [Request(f"L{i}", _toks(cfg, 4 * seg, seed=401 + i), 3)
+                   for i in range(4)])
+
+    waits = {}
+    for mode, n_conc in (("pooled", None), ("serial", 1)):
+        sched = ContinuousScheduler(eng, n_slots=5, chunk=4, max_queue=8,
+                                    prefill_groups_per_chunk=2,
+                                    max_concurrent_admissions=n_conc)
+        done = {e.req_id: e for e in sched.run(burst())
+                if isinstance(e, StreamEvent) and e.done}
+        assert set(done) == {"steady", "L0", "L1", "L2", "L3"}
+        assert len(sched.admission_windows) == 5
+        waits[mode] = sum(done[f"L{i}"].queue_wait_s for i in range(4))
+        conc = [done[f"L{i}"].concurrent_admissions for i in range(4)]
+        if mode == "pooled":
+            # all four longs (plus the steady admission) were in flight
+            # together; none starved — each got its round-robin budget and
+            # finished
+            assert max(conc) == 5, conc
+        else:
+            assert conc == [1, 1, 1, 1], conc
+    assert waits["pooled"] < waits["serial"], waits
+    # direct-generate results carry the same (idle) metric fields
+    res = eng.generate(jnp.asarray(_toks(cfg, 5, seed=409))[None], 2)
+    assert res.queue_wait_s == 0.0 and res.concurrent_admissions == 1
+
+
+def test_idle_drain_tight_loop(setup):
+    """With no decode slot active, pending admissions drain in a tight
+    loop instead of one k-group unit per full scheduling pass — and the
+    result stays token-identical."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    prompt = _toks(cfg, 6 * seg, seed=500)
+    sched = ContinuousScheduler(eng, n_slots=2, chunk=4,
+                                prefill_groups_per_chunk=1)
+    got = _collect(sched.run([Request("solo", prompt, 5)]))
+    assert sched.idle_drain_rounds >= 4     # most rounds ran in the tight loop
+    ref = eng.generate(jnp.asarray(prompt)[None], 5).tokens[0]
+    assert got["solo"] == ref.tolist()
+
+
+# ---------------------------------------------------------------------------
+# Donation safety: pooled carries alias nothing across the launch
+# ---------------------------------------------------------------------------
+
+def test_pool_carries_never_alias(setup):
+    """Regression for the pooled stepper's donation contract: member
+    carries returned by a pooled launch are pairwise fresh (never each
+    other's buffers, never the prefix cache's, never the inputs'), pads
+    are fresh zeros — so simulating the donation a GPU/TPU backend would
+    perform (deleting every input carry after the launch) leaves three
+    concurrent admissions that still finish with the blocking prefill's
+    logits, with the cache intact."""
+    cfg, params = setup
+    seg = cfg.armt.segment_len
+    cache = PrefixCache(seg, max_bytes=64 << 20)
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      prefix_cache=cache)
+    warm = _toks(cfg, 3 * seg, seed=600)
+    eng.generate(warm[None], 2)                      # fills the cache
+    snap_ptrs = set()
+    for slot in cache._lru.entries.values():
+        snap_ptrs |= _leaf_ptrs(slot.payload)
+
+    prompts = [np.concatenate([warm, _toks(cfg, 2 * seg + 4, seed=601 + i)])
+               for i in range(3)]
+    # reference on a cache-free engine: eng._prefill would insert each
+    # prompt's own 5-segment prefix and turn the pipes into tail-only hits
+    ref_eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+    refs = [ref_eng._prefill(jnp.asarray(p)[None]) for p in prompts]
+
+    pool = AdmissionPool(eng)
+    pipes = [eng.start_prefill(p[None], groups_per_call=1) for p in prompts]
+    for pipe in pipes:
+        assert pipe.cached == 3
+        pool.add(pipe)
+    assert pool.grid_cells_remaining() == 3 * 2 * eng._n_layers
+
+    # first pooled round: 3 members -> pow2 pool of 4 (one pad exercised)
+    buckets = pool.diag_buckets()
+    assert list(buckets) == [(2, True, 1)]
+    in_carries = [c for _, _, c in buckets[(2, True, 1)]]
+    in_ptrs = set().union(*[_leaf_ptrs(c) for c in in_carries])
+    done = pool.advance_round()
+    assert done == []
+    out_ptr_sets = [_leaf_ptrs(p._carry) for p in pipes]
+    for i, ptrs in enumerate(out_ptr_sets):
+        assert not (ptrs & snap_ptrs), "carry aliases the prefix cache"
+        assert not (ptrs & in_ptrs), "carry aliases a donated input"
+        for j in range(i + 1, 3):
+            assert not (ptrs & out_ptr_sets[j]), "carries alias each other"
+
+    # simulate donation: delete the inputs the pooled launch consumed,
+    # then drive the pool to completion through further pooled rounds
+    for c in in_carries:
+        for leaf in jax.tree_util.tree_leaves(c):
+            if isinstance(leaf, jax.Array):
+                leaf.delete()
+    while pool.members:
+        pool.advance_round()
+    assert pool.grid_cells_remaining() == 0
+    for pipe, ref, p in zip(pipes, refs, prompts):
+        logits, _dstate, pos, cached = pipe.result()
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref[0]),
+                                   rtol=1e-3, atol=1e-5)
+        assert pos == ref[2] and cached == 3
+    # and the cache survived the donated carries: a fresh admission hits
+    pipe2 = eng.start_prefill(jnp.asarray(prompts[0])[None])
+    assert pipe2.cached >= 3
+
+
+# ---------------------------------------------------------------------------
+# 8-fake-device mesh parity (subprocess, slow-marked)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import dataclasses
+import numpy as np
+import jax
+jax.config.update("jax_default_matmul_precision", "highest")
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+from repro.launch.mesh import parse_mesh
+
+cfg = dataclasses.replace(get_smoke_config("h2o-danube-1.8b"), n_kv_heads=4)
+params = init_params(cfg, jax.random.PRNGKey(0))
+seg = cfg.armt.segment_len
+rng = np.random.default_rng(7)
+
+ref_eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256)
+reqs = [Request(req_id=f"r{i}",
+                prompt=rng.integers(8, cfg.vocab, (L,)).astype(np.int32),
+                max_new=5)
+        for i, L in enumerate([2 * seg, 2 * seg, seg + 3, 7])]
+refs = {r.req_id: ref_eng.generate(np.asarray(r.prompt)[None], 5).tokens[0]
+        for r in reqs}
+
+for spec in ("data=2,model=4", "stage=2,model=4"):
+    eng = ServeEngine(params, cfg, serve_mode="armt", max_len=256,
+                      mesh=parse_mesh(spec))
+    for kw in (dict(max_concurrent_admissions=2),
+               dict(max_concurrent_admissions=3),
+               dict(fused_admission=True, max_concurrent_admissions=3)):
+        outs = {}
+        for ev in eng.serve(list(reqs), n_slots=3, chunk=3,
+                            prefill_groups_per_chunk=2, **kw):
+            outs.setdefault(ev.req_id, []).append(ev.token)
+        for r in reqs:
+            assert outs[r.req_id] == refs[r.req_id].tolist(), \
+                (spec, kw, r.req_id)
+    print(f"OK concurrent_{spec.split(',')[0].split('=')[0]}")
+"""
+
+
+@pytest.mark.slow
+def test_concurrent_admissions_sharded_token_identical():
+    """Pooled concurrent admissions (incl. the fused global-grid launch)
+    on 8-fake-device TP and stage-pipeline meshes are token-identical to
+    the single-device reference — the carry pool crosses GSPMD programs
+    via pool_carry_specs. Subprocess because XLA_FLAGS must be set before
+    jax imports (test_serve_sharded.py pattern); timeout skips."""
+    try:
+        r = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                           capture_output=True, text=True, timeout=600,
+                           env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                "HOME": "/root"})
+    except subprocess.TimeoutExpired:
+        pytest.skip("concurrent-mesh subprocess exceeded 600s: environment "
+                    "too constrained to compile the 8-fake-device GSPMD "
+                    "programs — exactness is asserted whenever the compile "
+                    "finishes (CI runs this in the sharded-serving step)")
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-2000:])
+    for m in ("concurrent_data", "concurrent_stage"):
+        assert f"OK {m}" in r.stdout, (m, r.stdout[-1000:])
