@@ -11,10 +11,20 @@ over the identical set is the no-continuous-batching baseline. A warmup
 pass absorbs compilation so the numbers measure the steady state.
 
 Every scheduler record also carries inter-token-latency percentiles
-(``itl_s_p50``/``itl_s_p99``, pooled per-request gaps between StreamEvent
-``t_emit`` stamps) and ``admission_stall_s`` — the max decode gap whose
-interval overlaps an admission window, i.e. the head-of-line stall an
-admission inflicts on already-decoding slots.
+(``itl_s_p50``/``itl_s_p99``) and ``admission_stall_s`` — the max decode
+gap whose interval overlaps an admission window, i.e. the head-of-line
+stall an admission inflicts on already-decoding slots. Both are derived
+by the serve stack's OWN trace recorder (serve/telemetry.py, DESIGN.md
+§13) from the per-chunk emit stamps and admission spans — one source of
+truth shared with ``--trace-out`` timelines, not a bench-local rescan of
+``t_emit`` gaps (tests/test_telemetry.py asserts the derivations agree
+with the pre-PR-7 reference implementations). A ``telemetry`` payload
+section records the engine's compile counts, the process registry
+(XLA backend compiles, sharding fallbacks), and a paired telemetry-on vs
+telemetry-off decode-throughput overhead ratio (acceptance floor 0.98);
+the pooled burst run's full Chrome trace is exported to
+``BENCH_SERVE_TRACE`` (default ``BENCH_serve_trace.json``) and
+schema-validated.
 
 A ``mixed_workload`` scenario (DESIGN.md §11) drops long-prompt admissions
 into a steadily decoding pool and runs the SAME request set in both
@@ -59,10 +69,12 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import paired_median, row
 from repro.configs import ARMTConfig, get_smoke_config
 from repro.models import init_params
-from repro.serve import PrefixCache, Request, ServeEngine, SessionStore
+from repro.serve import (MetricsRegistry, PrefixCache, Request, ServeEngine,
+                         SessionStore, Telemetry, default_registry,
+                         validate_chrome_trace)
 
 SEG = 32
 
@@ -86,44 +98,20 @@ def _requests(cfg, n, max_new, seed=0):
             for i, L in enumerate(lens)]
 
 
-def _itl_stats(emit_times):
-    """Per-request inter-token latencies, pooled -> (p50, p99). Events
-    surface at chunk boundaries, so ITLs inside one chunk are ~0 and the
-    tail percentiles expose chunk gaps and admission stalls."""
-    itls = []
-    for times in emit_times.values():
-        itls += [b - a for a, b in zip(times, times[1:])]
-    if not itls:
-        return 0.0, 0.0
-    return (float(np.percentile(itls, 50)), float(np.percentile(itls, 99)))
-
-
-def _admission_stall(windows, emit_times):
-    """Max decode gap (between consecutive stream-event host timestamps,
-    any request) whose interval overlaps an admission window — the
-    head-of-line stall a blocking admission inflicts on already-decoding
-    slots. 0.0 when no admission overlapped active decode (e.g. the cold
-    fill of an empty pool)."""
-    times = sorted({t for ts in emit_times.values() for t in ts})
-    gaps = [(a, b) for a, b in zip(times, times[1:])]
-    stall = 0.0
-    for (w0, w1) in windows:
-        for (a, b) in gaps:
-            if a <= w1 and b >= w0:
-                stall = max(stall, b - a)
-    return stall
-
-
 def _drive(eng, reqs, n_slots, chunk, *, groups_per_chunk=4, fused=False,
            max_concurrent=None, fairness="round_robin", max_queue=None,
-           detail=False):
+           detail=False, trace_path=None, embed_metrics=False):
     # per-request timings come from the stream's own metrics (StreamEvent
-    # ttft_s / tok_s / t_emit / queue_wait_s) — the bench no longer
-    # re-derives them externally; the scheduler is built directly so its
-    # admission windows are readable afterwards. max_queue switches to the
-    # push model (backlog drained at t=0), which is what makes queue_wait_s
-    # measure real head-of-line waiting instead of pull latency.
+    # ttft_s / tok_s / queue_wait_s); ITL percentiles and admission stall
+    # come from the trace recorder's emit stamps and admission spans —
+    # the same timeline --trace-out exports. The scheduler is built
+    # directly so it picks up the per-run Telemetry swapped onto the
+    # engine. max_queue switches to the push model (backlog drained at
+    # t=0), which is what makes queue_wait_s measure real head-of-line
+    # waiting instead of pull latency.
     from repro.serve.scheduler import ContinuousScheduler
+    tel = Telemetry(trace=True, registry=MetricsRegistry())
+    prev_tel, eng.telemetry = eng.telemetry, tel
     sched = ContinuousScheduler(eng, n_slots=n_slots, chunk=chunk,
                                 max_queue=max_queue,
                                 prefill_groups_per_chunk=groups_per_chunk,
@@ -133,18 +121,19 @@ def _drive(eng, reqs, n_slots, chunk, *, groups_per_chunk=4, fused=False,
     t0 = time.perf_counter()
     ttft, tok_s, done_at, n_tok = {}, {}, {}, 0
     qwait, conc = {}, {}
-    emit_times = {}
-    for ev in sched.run(iter(reqs)):
-        n_tok += 1
-        emit_times.setdefault(ev.req_id, []).append(ev.t_emit)
-        if ev.done:
-            ttft[ev.req_id] = ev.ttft_s
-            tok_s[ev.req_id] = ev.tok_s
-            done_at[ev.req_id] = time.perf_counter() - t0
-            qwait[ev.req_id] = ev.queue_wait_s
-            conc[ev.req_id] = ev.concurrent_admissions
+    try:
+        for ev in sched.run(iter(reqs)):
+            n_tok += 1
+            if ev.done:
+                ttft[ev.req_id] = ev.ttft_s
+                tok_s[ev.req_id] = ev.tok_s
+                done_at[ev.req_id] = time.perf_counter() - t0
+                qwait[ev.req_id] = ev.queue_wait_s
+                conc[ev.req_id] = ev.concurrent_admissions
+    finally:
+        eng.telemetry = prev_tel
     wall = time.perf_counter() - t0
-    itl_p50, itl_p99 = _itl_stats(emit_times)
+    itl_p50, itl_p99 = tel.trace.itl_percentiles()
     rec = {
         "wall_s": wall,
         "throughput_tok_s": n_tok / wall,
@@ -155,8 +144,7 @@ def _drive(eng, reqs, n_slots, chunk, *, groups_per_chunk=4, fused=False,
         "latency_s_max": float(np.max(list(done_at.values()))),
         "itl_s_p50": itl_p50,
         "itl_s_p99": itl_p99,
-        "admission_stall_s": _admission_stall(sched.admission_windows,
-                                              emit_times),
+        "admission_stall_s": tel.trace.admission_stall_s(),
         "queue_wait_s_mean": float(np.mean(list(qwait.values()))),
         "queue_wait_s_max": float(np.max(list(qwait.values()))),
         "concurrent_admissions_max": int(max(conc.values())),
@@ -167,6 +155,19 @@ def _drive(eng, reqs, n_slots, chunk, *, groups_per_chunk=4, fused=False,
                   "queue_wait_s": qwait[rid],
                   "concurrent_admissions": conc[rid]}
             for rid in ttft}
+    if embed_metrics:
+        rec["metrics"] = tel.registry.snapshot()
+    if trace_path is not None:
+        trace = tel.trace.chrome_trace()
+        errors = validate_chrome_trace(trace)
+        with open(trace_path, "w") as f:
+            json.dump(trace, f)
+        rec["trace_artifact"] = {
+            "path": trace_path,
+            "n_events": len(trace["traceEvents"]),
+            "valid": not errors,
+            "errors": errors,
+        }
     return rec
 
 
@@ -366,8 +367,7 @@ def _bench_mixed_workload(cfg, params, quick: bool):
     # box) drifts 2-3x over minutes, which cancels within a round but not
     # across per-mode aggregates
     def paired(metric, num, den):
-        return float(np.median([runs[num][i][metric] / runs[den][i][metric]
-                                for i in range(reps)]))
+        return paired_median(runs, metric, num, den)
 
     rec["stall_reduction_x"] = paired("admission_stall_s",
                                       "blocking", "interleaved")
@@ -449,11 +449,20 @@ def _bench_burst_admission(cfg, params, quick: bool):
         _drive(eng, reqs(), n_slots, chunk, max_queue=8, detail=True, **kw)
     # round-robin reps across modes so host drift cancels within a round
     # (same rationale as the mixed_workload pairing)
+    # the final pooled run's full Chrome trace is the bench's observability
+    # artifact: chunks, admission rounds, flushes and idle-drain rounds of
+    # the burst scenario, schema-validated before the payload records it
+    trace_out = os.environ.get("BENCH_SERVE_TRACE", "BENCH_serve_trace.json")
+    trace_info = None
     runs = {name: [] for name, _ in modes}
-    for _ in range(reps):
+    for rep in range(reps):
         for name, kw in modes:
+            last_pooled = name == "pooled_n4" and rep == reps - 1
             r = _drive(eng, reqs(), n_slots, chunk, max_queue=8,
-                       detail=True, **kw)
+                       detail=True,
+                       trace_path=trace_out if last_pooled else None, **kw)
+            if last_pooled:
+                trace_info = r.pop("trace_artifact")
             per = r.pop("per_request")
             r["burst_wait_s"] = float(
                 sum(per[f"L{i}"]["queue_wait_s"] for i in range(4)))
@@ -471,8 +480,7 @@ def _bench_burst_admission(cfg, params, quick: bool):
         rec[name].update({k: v for k, v in kw.items()})
 
     def paired(metric, num, den):
-        return float(np.median([runs[num][i][metric] / runs[den][i][metric]
-                                for i in range(reps)]))
+        return paired_median(runs, metric, num, den)
 
     rec["burst_wait_reduction_x"] = paired("burst_wait_s",
                                            "interleaved_n1", "pooled_n4")
@@ -480,6 +488,7 @@ def _bench_burst_admission(cfg, params, quick: bool):
         "burst_wait_s", "blocking", "pooled_n4")
     rec["steady_tok_s_ratio"] = paired("steady_tok_s",
                                        "pooled_n4", "interleaved_n1")
+    rec["trace_artifact"] = trace_info
     n1, n4 = rec["interleaved_n1"], rec["pooled_n4"]
     row("serve_burst_admission", n4["burst_wait_s"],
         f"burst wait n1={n1['burst_wait_s']:.3f}s "
@@ -488,6 +497,61 @@ def _bench_burst_admission(cfg, params, quick: bool):
         f"{rec['burst_wait_reduction_vs_blocking_x']:.1f}x) "
         f"steady tok/s ratio={rec['steady_tok_s_ratio']:.2f} "
         f"conc max={n4['concurrent_admissions_max']}")
+    return rec
+
+
+def _bench_telemetry_overhead(cfg, params, quick: bool):
+    """Paired decode-throughput cost of the telemetry layer (DESIGN.md
+    §13): the SAME steady-decode workload driven with full telemetry
+    (trace recorder + metrics registry) vs ``Telemetry.disabled()``. The
+    recorder is host-side and piggybacks on the scheduler's once-per-chunk
+    host transfer — zero extra device syncs — so the paired median ratio
+    should be ~1.0 (acceptance floor 0.98, EXPERIMENTS.md
+    §Observability)."""
+    from repro.serve.scheduler import ContinuousScheduler
+    max_new = 96 if quick else 256
+    n_slots, chunk = 4, 8
+    reps = 5          # drives are ~100ms each; extra reps are cheap and the
+    #                   ratio is a ~2% effect under >10% host drift
+    eng = ServeEngine(params, cfg, serve_mode="armt",
+                      max_len=4 * SEG + max_new)
+
+    def drive(tel):
+        prev, eng.telemetry = eng.telemetry, tel
+        sched = ContinuousScheduler(eng, n_slots=n_slots, chunk=chunk)
+        t0 = time.perf_counter()
+        n_tok = 0
+        try:
+            for _ in sched.run(iter(_requests(cfg, n_slots, max_new,
+                                              seed=7))):
+                n_tok += 1
+        finally:
+            eng.telemetry = prev
+        wall = time.perf_counter() - t0
+        return {"wall_s": wall, "throughput_tok_s": n_tok / wall}
+
+    modes = (("off", Telemetry.disabled),
+             ("on", lambda: Telemetry(trace=True,
+                                      registry=MetricsRegistry())))
+    for _, mk in modes:                                            # warmup
+        drive(mk())
+    # round-robin off/on within each rep so host drift cancels in the pair
+    runs = {name: [] for name, _ in modes}
+    for _ in range(reps):
+        for name, mk in modes:
+            runs[name].append(drive(mk()))
+    rec = {"n_slots": n_slots, "chunk": chunk, "max_new": max_new,
+           "reps": reps}
+    for name, _ in modes:
+        rec[name] = {
+            "wall_s": float(min(r["wall_s"] for r in runs[name])),
+            "throughput_tok_s": float(max(r["throughput_tok_s"]
+                                          for r in runs[name]))}
+    rec["throughput_ratio_on_off"] = paired_median(
+        runs, "throughput_tok_s", "on", "off")
+    row("serve_telemetry_overhead", rec["throughput_ratio_on_off"],
+        f"on/off tok/s ratio={rec['throughput_ratio_on_off']:.3f} "
+        f"(floor 0.98)")
     return rec
 
 
@@ -532,7 +596,11 @@ def bench_serve(quick: bool = True, out_path: str | None = None,
         warm(eng, n_slots)
         rec = {"n_slots": n_slots, "n_requests": n_req, "max_new": max_new,
                "chunk": chunk}
-        rec.update(_drive(eng, reqs, n_slots, chunk))
+        # the largest slot count carries its full per-run metrics snapshot
+        # (pool occupancy, queue depth, flush counters, ...) so the JSON
+        # artifact shows the registry's view without bloating every record
+        rec.update(_drive(eng, reqs, n_slots, chunk,
+                          embed_metrics=n_slots == max(slot_counts)))
         rec["speedup_vs_one_by_one"] = rec["throughput_tok_s"] / baseline_tok_s
         results.append(rec)
         row(f"serve_slots{n_slots}", rec["wall_s"],
@@ -568,6 +636,9 @@ def bench_serve(quick: bool = True, out_path: str | None = None,
     # pooled concurrent admissions vs the single-carry interleaved mode
     # under a 4-prompt burst (DESIGN.md §12)
     burst_admission = _bench_burst_admission(cfg, params, quick)
+    # telemetry-on vs telemetry-off paired decode throughput (DESIGN.md
+    # §13 zero-sync argument, measured)
+    telemetry_overhead = _bench_telemetry_overhead(cfg, params, quick)
 
     # own env var — sharing BENCH_OUT with bench_diagonal would make the two
     # benches overwrite each other's artifact under benchmarks.run
@@ -591,6 +662,15 @@ def bench_serve(quick: bool = True, out_path: str | None = None,
         "multi_turn": multi_turn,
         "mixed_workload": mixed_workload,
         "burst_admission": burst_admission,
+        # observability section (ISSUE 8 / DESIGN.md §13): engine jit-cache
+        # sizes (the pow2-bucket "O(log) compiles" claim in numbers), the
+        # process-wide registry (XLA backend-compile events, sharding
+        # fallbacks) and the measured telemetry overhead ratio
+        "telemetry": {
+            "engine_compile_counts": eng.compile_counts(),
+            "registry": default_registry().snapshot(),
+            "overhead": telemetry_overhead,
+        },
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)

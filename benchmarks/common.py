@@ -20,6 +20,20 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(ts))
 
 
+def paired_median(runs: dict, metric: str, num: str, den: str) -> float:
+    """Median of per-rep ratios ``runs[num][i][metric] / runs[den][i][metric]``.
+
+    ``runs`` maps mode name -> list of per-rep record dicts, collected
+    round-robin (A/B, A/B, ...) so each rep's pair shares the same host
+    conditions: load drift on a shared box cancels within a rep but not
+    across per-mode aggregates. The headline ratio of every paired bench
+    (mixed_workload, burst_admission, telemetry overhead) goes through
+    this helper."""
+    n = min(len(runs[num]), len(runs[den]))
+    return float(np.median([runs[num][i][metric] / runs[den][i][metric]
+                            for i in range(n)]))
+
+
 def row(name: str, seconds: float, derived: str = "") -> str:
     line = f"{name},{seconds * 1e6:.1f},{derived}"
     print(line, flush=True)

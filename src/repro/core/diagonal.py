@@ -137,6 +137,13 @@ def _diag_body(layout: StackLayout, params: Dict, apply_block: ApplyBlock,
     _constrain_states = _constrain_states_fn(buf_spec)
 
     def diag_step(carry, xs):
+        # named_scope: the anti-diagonal group shows up as one labeled
+        # region in XLA profiles, matching the serve stack's host spans
+        # (DESIGN.md §13)
+        with jax.named_scope("diag.antidiagonal"):
+            return _diag_step(carry, xs)
+
+    def _diag_step(carry, xs):
         buf, states = carry
         seg_in, i = xs
         # insert the new segment into slot 0 with an elementwise select (an

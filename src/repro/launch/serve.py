@@ -21,6 +21,16 @@ Both modes accept ``--mesh data=2,model=4[,stage=..]`` (launch/mesh.py
 and the whole serve stack stays single jitted graphs with GSPMD inserting
 the collectives. Sharded serving is token-identical to single-device
 (tests/test_serve_sharded.py).
+
+Observability (DESIGN.md §13): ``--trace-out trace.json`` records the
+chunk-granular span timeline (Chrome-trace JSON for
+https://ui.perfetto.dev; schema-validated on export, gated in CI via
+``python -m repro.serve.telemetry``), ``--metrics`` / ``--metrics-out``
+dump the metrics-registry snapshot (admissions, flushes, queue waits,
+pool occupancy, jit-compile counts, XLA backend compiles), and
+``--profile-dir`` captures a ``jax.profiler`` trace whose
+``named_scope``/``TraceAnnotation`` host spans line up with the
+recorder's timeline.
 """
 from __future__ import annotations
 
@@ -93,15 +103,32 @@ def main():
                          "be omitted). Params shard over 'model'/'stage', "
                          "decode slots over 'data'; GSPMD does the "
                          "collectives")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="observability (DESIGN.md §13): write the serve "
+                         "run's chunk-granular trace timeline as Chrome-"
+                         "trace/Perfetto JSON (load in ui.perfetto.dev)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the engine's metrics snapshot (compile "
+                         "counts, store stats, serving histograms) as JSON "
+                         "after the run")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics snapshot JSON to a file")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler XLA trace of the run into "
+                         "this directory (TensorBoard/Perfetto); the "
+                         "scheduler's TraceAnnotation spans line up with "
+                         "the device timeline")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    import json
 
     import jax
     import numpy as np
     from repro.configs import get_config, get_smoke_config
     from repro.models import init_params
     from repro.serve import (PrefixCache, Request, RequestError, ServeEngine,
-                             SessionStore)
+                             SessionStore, Telemetry, validate_chrome_trace)
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
@@ -123,11 +150,33 @@ def main():
                                   spill_dir=args.store_dir)
                      if args.session_store else None)
     # headroom for the longer of the two continuous prompt buckets
+    tel = Telemetry(trace=args.trace_out is not None)
     eng = ServeEngine(params, cfg, serve_mode=args.serve_mode,
                       schedule=args.schedule,
                       max_len=args.prompt_len + seg // 2 + args.max_new,
                       prefix_cache=prefix_cache, session_store=session_store,
-                      mesh=mesh)
+                      mesh=mesh, telemetry=tel)
+
+    def emit_telemetry():
+        """--trace-out / --metrics[-out] epilogue shared by both modes."""
+        if args.trace_out:
+            tel.trace.export(args.trace_out)
+            errs = validate_chrome_trace(args.trace_out)
+            n = len(tel.trace.spans)
+            if errs:
+                raise SystemExit(f"trace schema check failed: {errs}")
+            print(f"trace: {n} spans -> {args.trace_out}")
+        if args.metrics or args.metrics_out:
+            snap = eng.metrics_snapshot()
+            if args.metrics:
+                print("metrics:", json.dumps(snap, indent=2, default=str))
+            if args.metrics_out:
+                with open(args.metrics_out, "w") as f:
+                    json.dump(snap, f, indent=2, default=str)
+                print(f"metrics -> {args.metrics_out}")
+
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
 
     if args.continuous:
         rng = np.random.default_rng(args.seed + 1)
@@ -194,6 +243,10 @@ def main():
                   f"{len(prefix_cache)} entries, "
                   f"{st['bytes_in_ram'] / 2**10:.1f} KiB, "
                   f"{st['evictions']} evictions ({st['spills']} spilled)")
+        if args.profile_dir:
+            jax.profiler.stop_trace()
+            print(f"xla profile -> {args.profile_dir}")
+        emit_telemetry()
         return
 
     prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
@@ -209,6 +262,10 @@ def main():
               f"{r2.resumed} ttft={r2.ttft_s:.2f}s "
               f"({turn2.shape[1]} new tokens, history never recomputed)")
         print("turn2 first 8:", r2.tokens[0, :8].tolist())
+        if args.profile_dir:
+            jax.profiler.stop_trace()
+            print(f"xla profile -> {args.profile_dir}")
+        emit_telemetry()
         return
 
     t0 = time.perf_counter()
@@ -220,6 +277,10 @@ def main():
     print(f"generated {res.tokens.shape} tokens in {dt:.2f}s "
           f"(ttft={res.ttft_s:.2f}s, decode {res.tok_s:.1f} tok/s)")
     print("first row:", res.tokens[0].tolist())
+    if args.profile_dir:
+        jax.profiler.stop_trace()
+        print(f"xla profile -> {args.profile_dir}")
+    emit_telemetry()
 
 
 if __name__ == "__main__":

@@ -28,7 +28,15 @@ _warned: set = set()
 def _warn_replicated(kind: str, leaf: str, dim: int, size: int,
                      axis: str, axis_size: int) -> None:
     """One structured line per distinct fallback: a dim a rule *wanted* to
-    shard does not divide its mesh axis, so it is replicated instead."""
+    shard does not divide its mesh axis, so it is replicated instead.
+
+    Every occurrence also increments the default telemetry registry's
+    ``sharding_fallback_total`` counter (labeled kind/leaf/dim/axis,
+    DESIGN.md §13) — the counter is NOT deduped, so a fallback re-hit on
+    every trace still counts, while the log line stays one per distinct
+    site."""
+    _registry().inc("sharding_fallback_total", kind=kind, leaf=leaf,
+                    dim=dim, axis=axis)
     key = (kind, leaf, dim, size, axis, axis_size)
     if key in _warned:
         return
@@ -39,8 +47,29 @@ def _warn_replicated(kind: str, leaf: str, dim: int, size: int,
 
 
 def reset_fallback_warnings() -> None:
-    """Clear the warning dedup set (tests)."""
+    """Clear the warning dedup set AND the registry's fallback counter —
+    one reset for both views of the same events. The inverse direction is
+    unified too: ``_registry()`` installs ``_warned.clear`` as a reset
+    hook, so ``default_registry().reset()`` clears the dedup set."""
     _warned.clear()
+    _registry().remove_series("sharding_fallback_total")
+
+
+_hooked = False
+
+
+def _registry():
+    """The default telemetry registry, with this module's dedup set wired
+    into its reset on first use. Imported lazily at call time — the serve
+    package's __init__ imports the engine, which imports this module, so a
+    module-level import either way would be a cycle."""
+    global _hooked
+    from repro.serve.telemetry import default_registry
+    reg = default_registry()
+    if not _hooked:
+        reg.register_reset_hook(_warned.clear)
+        _hooked = True
+    return reg
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:

@@ -5,3 +5,5 @@ from repro.serve.scheduler import (ContinuousScheduler, Request, RequestError,
 from repro.serve.state_store import (PrefixCache, SegmentSnapshot,
                                      SessionEntry, SessionEvicted,
                                      SessionStore, prefix_hash_chain)
+from repro.serve.telemetry import (MetricsRegistry, Telemetry, TraceRecorder,
+                                   default_registry, validate_chrome_trace)

@@ -70,6 +70,7 @@ from repro.models import (boundary_logits, decode_state_init,
                           flush_segment, forward_hidden, init_state,
                           last_logits)
 from repro.parallel import sharding as shd
+from repro.serve.telemetry import Telemetry
 
 
 def _transplant(fin: Dict, dstate: Dict) -> Dict:
@@ -119,6 +120,10 @@ class GenerationResult:
     # they exist so result records from both front doors aggregate uniformly
     queue_wait_s: float = 0.0
     concurrent_admissions: int = 1
+    # telemetry snapshot at result time (DESIGN.md §13): the engine's
+    # metrics registry — compile counts, store stats, serving histograms —
+    # as a JSON-able dict; None when the engine's telemetry is disabled
+    metrics: Optional[Dict] = None
 
 
 class ServeEngine:
@@ -146,7 +151,8 @@ class ServeEngine:
                  schedule: str = "diagonal", max_len: int = 8192,
                  grouped_impl: Optional[str] = None,
                  prefix_cache=None, session_store=None,
-                 bucket_prompts: bool = True, mesh=None):
+                 bucket_prompts: bool = True, mesh=None,
+                 telemetry: Optional[Telemetry] = None):
         if serve_mode not in ("armt", "cache"):
             raise ValueError(f"unknown serve_mode {serve_mode!r}")
         if serve_mode == "armt" and cfg.armt is None and not cfg.is_recurrent:
@@ -211,6 +217,60 @@ class ServeEngine:
         #                              ('pool', chunk, bucket-signatures))
         self._pool_steps: Dict = {}  # (S, B, capture, k, n_pool) -> jitted
         #                              pooled stepper (admission pool §12)
+        # observability (DESIGN.md §13): metrics into the process default
+        # registry unless told otherwise; spans only when a recorder was
+        # asked for. Host-side only — never adds a device sync.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        reg = self.telemetry.registry
+        if reg is not None:
+            # probes are sampled at snapshot time, so compile counts and
+            # store stats are always current with zero per-chunk bookkeeping
+            reg.register_probe("engine_compile_counts", self.compile_counts)
+            if prefix_cache is not None:
+                reg.register_probe(
+                    "prefix_cache", lambda: self.prefix_cache.stats.as_dict())
+            if session_store is not None:
+                reg.register_probe(
+                    "session_store",
+                    lambda: self.session_store.stats.as_dict())
+
+    # ------------------------------------------------------------------
+    # Observability (DESIGN.md §13)
+    # ------------------------------------------------------------------
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Compiled-program counts per jit-cache kind, from the jitted
+        functions' own trace caches — the per-signature ground truth behind
+        the pow2-bucketing "O(log) compiles" claim (the registry's
+        ``xla_backend_compiles_total`` counter cross-checks it at the XLA
+        layer)."""
+        def sz(fn):
+            return fn._cache_size() if hasattr(fn, "_cache_size") else 0
+
+        counts = {
+            "decode_step": sz(self._step),
+            "flush": sz(self._flush) if self._flush is not None else 0,
+            "decode_loops": sum(sz(f) for f in self._loops.values()),
+            "scheduler_fns": sum(sz(f) for fns in self._sched_fns.values()
+                                 for f in fns),
+            "prefill_steps": sum(sz(f) for f in self._pipe_steps.values()),
+            "fused": sum(sz(f) for f in self._fused_fns.values()),
+            "pool_steps": sum(sz(f) for f in self._pool_steps.values()),
+        }
+        counts["total"] = sum(counts.values())
+        return counts
+
+    def metrics_snapshot(self) -> Dict:
+        """Registry snapshot plus the engine's own probes flattened in —
+        what ``launch/serve.py --metrics`` dumps and ``bench_serve.py``
+        embeds into BENCH_serve.json."""
+        snap = self.telemetry.snapshot() or {}
+        snap["compile_counts"] = self.compile_counts()
+        if self.prefix_cache is not None:
+            snap["prefix_cache"] = self.prefix_cache.stats.as_dict()
+        if self.session_store is not None:
+            snap["session_store"] = self.session_store.stats.as_dict()
+        return snap
 
     # ------------------------------------------------------------------
     # Mesh placement (DESIGN.md §10) — no-ops on a mesh-less engine
@@ -313,7 +373,11 @@ class ServeEngine:
             from repro.serve.state_store import prefix_hash_chain
             prompt_np = np.asarray(prompts[0], np.int32)
             chain = prefix_hash_chain(prompt_np, self.seg_len)
-            cached, snap = self.prefix_cache.match(prompt_np, chain=chain)
+            with self.telemetry.span("prefix_probe", "cache",
+                                     n_segments=n_full):
+                cached, snap = self.prefix_cache.match(prompt_np, chain=chain)
+            self.telemetry.inc("prefix_probe_total",
+                               result="hit" if cached else "miss")
             if cached:
                 exec_state = self._place_state(snap.state, B)
                 dstate = _transplant(exec_state, dstate)
@@ -366,7 +430,9 @@ class ServeEngine:
             logits, dstate = self._step(self.params, dstate,
                                         toks[:, t:t + take])
             if flush:
-                dstate = self._flush(self.params, dstate)
+                with self.telemetry.span("flush_segment", "flush",
+                                         take=take):
+                    dstate = self._flush(self.params, dstate)
         return logits, dstate, end_pos
 
     # ------------------------------------------------------------------
@@ -414,9 +480,13 @@ class ServeEngine:
         def step(params, xs, carry):
             exec_params = {"prelude": params["prelude"],
                            "pattern": params["pattern"]}
-            return diag.pipeline_step(layout, exec_params, xs, carry, apply,
-                                      n_groups=n_groups, buf_spec=buf_spec,
-                                      grouped_apply=gapply)
+            # named_scope: XLA profiles show these ops under a stable label
+            # that matches the scheduler's host spans (DESIGN.md §13)
+            with jax.named_scope("serve.diag_stage"):
+                return diag.pipeline_step(layout, exec_params, xs, carry,
+                                          apply, n_groups=n_groups,
+                                          buf_spec=buf_spec,
+                                          grouped_apply=gapply)
 
         donate = (2,) if jax.default_backend() != "cpu" else ()
         self._pipe_steps[key] = jax.jit(step, donate_argnums=donate)
@@ -440,24 +510,25 @@ class ServeEngine:
         del capture                       # implied by the carry structure
 
         def body(params, xs_tup, carry_tup):
-            exec_params = {"prelude": params["prelude"],
-                           "pattern": params["pattern"]}
-            xs_pool = jax.tree_util.tree_map(
-                lambda *ls: jnp.stack(ls), *xs_tup)
-            carry_pool = jax.tree_util.tree_map(
-                lambda *ls: jnp.stack(ls), *carry_tup)
-            pool_spec = None
-            if mesh is not None:
-                pool_spec = shd.pool_carry_specs(
-                    carry_pool, mesh, layout.n_layers, batch,
-                    stacked_axis=stacked_axis)
-            carry_pool = diag.pipeline_step_pool(
-                layout, exec_params, xs_pool, carry_pool, apply,
-                n_groups=n_groups, grouped_apply=gapply,
-                pool_spec=pool_spec)
-            return tuple(
-                jax.tree_util.tree_map(lambda a, _i=i: a[_i], carry_pool)
-                for i in range(n_pool))
+            with jax.named_scope("serve.pooled_diag_round"):
+                exec_params = {"prelude": params["prelude"],
+                               "pattern": params["pattern"]}
+                xs_pool = jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls), *xs_tup)
+                carry_pool = jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls), *carry_tup)
+                pool_spec = None
+                if mesh is not None:
+                    pool_spec = shd.pool_carry_specs(
+                        carry_pool, mesh, layout.n_layers, batch,
+                        stacked_axis=stacked_axis)
+                carry_pool = diag.pipeline_step_pool(
+                    layout, exec_params, xs_pool, carry_pool, apply,
+                    n_groups=n_groups, grouped_apply=gapply,
+                    pool_spec=pool_spec)
+                return tuple(
+                    jax.tree_util.tree_map(lambda a, _i=i: a[_i], carry_pool)
+                    for i in range(n_pool))
 
         return body
 
@@ -573,11 +644,14 @@ class ServeEngine:
             # token 0 comes from the prefill logits; the scan emits the
             # max_new-1 stepped samples, so the last emitted token is never
             # fed through a wasted forward
-            keys = jax.random.split(rng, max_new)
-            tok0 = sample(logits0, keys[0])
-            (fstate, _), toks = jax.lax.scan(body, (dstate, tok0), keys[1:])
-            toks = jnp.concatenate([tok0[None], toks], axis=0).T  # [B, max_new]
-            return toks, fstate
+            with jax.named_scope("serve.decode_loop"):
+                keys = jax.random.split(rng, max_new)
+                tok0 = sample(logits0, keys[0])
+                (fstate, _), toks = jax.lax.scan(body, (dstate, tok0),
+                                                 keys[1:])
+                toks = jnp.concatenate([tok0[None], toks],
+                                       axis=0).T  # [B, max_new]
+                return toks, fstate
 
         # donation is a no-op (with a warning) on CPU — only request it where
         # the backend honors it
@@ -616,29 +690,37 @@ class ServeEngine:
                     f"tokens) exceeds max_len {self.max_len} of the KV cache")
         t0 = time.perf_counter()
         cached = 0
+        tel = self.telemetry
         if entry is not None:
             # scatter-on-restore: session blobs are mesh-shape-agnostic
             # (gathered to host by the store when sharded) — commit them to
             # *this* engine's shardings, whatever mesh the blob came from
-            restored = self._place_state(
-                {"prelude": entry.state["prelude"],
-                 "pattern": entry.state["pattern"]}, 1)
-            dstate = {**restored, "pos": jnp.asarray(entry.pos, jnp.int32)}
-            toks_in = np.concatenate(
-                [entry.pending, np.asarray(prompts[0], np.int32)])
-            logits, dstate, _pos = self._chunk(
-                dstate, jnp.asarray(toks_in[None]), entry.pos)
+            with tel.span("session_restore", "session", session=session_id):
+                restored = self._place_state(
+                    {"prelude": entry.state["prelude"],
+                     "pattern": entry.state["pattern"]}, 1)
+                dstate = {**restored,
+                          "pos": jnp.asarray(entry.pos, jnp.int32)}
+                toks_in = np.concatenate(
+                    [entry.pending, np.asarray(prompts[0], np.int32)])
+                logits, dstate, _pos = self._chunk(
+                    dstate, jnp.asarray(toks_in[None]), entry.pos)
         else:
-            logits, dstate, _pos, cached = self._prefill(
-                prompts, enc_frames=enc_frames)
+            with tel.span("prefill", "prefill", prompt_len=P, batch=B):
+                logits, dstate, _pos, cached = self._prefill(
+                    prompts, enc_frames=enc_frames)
         jax.block_until_ready(logits)
         t_first = time.perf_counter()
-        loop = self._decode_loop(max_new, temperature <= 0.0, top_k)
-        toks, fstate = loop(self.params, dstate, logits,
-                            jnp.float32(max(temperature, 1e-6)),
-                            jax.random.PRNGKey(seed))
-        toks = np.asarray(toks)
+        with tel.span("decode", "decode", max_new=max_new):
+            loop = self._decode_loop(max_new, temperature <= 0.0, top_k)
+            toks, fstate = loop(self.params, dstate, logits,
+                                jnp.float32(max(temperature, 1e-6)),
+                                jax.random.PRNGKey(seed))
+            toks = np.asarray(toks)
         t_end = time.perf_counter()
+        tel.observe("generate_ttft_s", t_first - t0)
+        tel.observe("generate_decode_tok_s",
+                    max_new / max(t_end - t_first, 1e-9))
         if session_id is not None:
             # the loop never feeds the last sampled token — it becomes the
             # resume's `pending` prefix (see _decode_loop)
@@ -656,7 +738,9 @@ class ServeEngine:
             ttft_s=t_first - t0,
             tok_s=max_new / max(t_end - t_first, 1e-9),
             cached_segments=cached, session_id=session_id,
-            resumed=entry is not None)
+            resumed=entry is not None,
+            metrics=(self.metrics_snapshot()
+                     if tel.registry is not None else None))
 
     # ------------------------------------------------------------------
     # Continuous batching
@@ -797,9 +881,10 @@ class PrefillPipeline:
             # then consumed piecewise by tail chunks only
             if B != 1:
                 raise ValueError("sessions are per-conversation: B must be 1")
-            restored = engine._place_state(
-                {"prelude": session_entry.state["prelude"],
-                 "pattern": session_entry.state["pattern"]}, B)
+            with engine.telemetry.span("session_restore", "session"):
+                restored = engine._place_state(
+                    {"prelude": session_entry.state["prelude"],
+                     "pattern": session_entry.state["pattern"]}, B)
             self._dstate = {**restored,
                             "pos": jnp.asarray(session_entry.pos, jnp.int32)}
             toks_in = np.concatenate(
@@ -823,8 +908,12 @@ class PrefillPipeline:
             from repro.serve.state_store import prefix_hash_chain
             self._prompt_np = np.asarray(prompts[0], np.int32)
             self._chain = prefix_hash_chain(self._prompt_np, engine.seg_len)
-            self.cached, snap = engine.prefix_cache.match(self._prompt_np,
-                                                          chain=self._chain)
+            with engine.telemetry.span("prefix_probe", "cache",
+                                       n_segments=n_full):
+                self.cached, snap = engine.prefix_cache.match(
+                    self._prompt_np, chain=self._chain)
+            engine.telemetry.inc("prefix_probe_total",
+                                 result="hit" if self.cached else "miss")
             if self.cached:
                 # fresh buffers (the stepper donates this into its carry)
                 self._exec_state = engine._place_state(snap.state, B)
@@ -968,7 +1057,8 @@ class PrefillPipeline:
                                                self._tail[:, t:t + take])
         self._pos += take
         if flush:
-            self._dstate = eng._flush(eng.params, self._dstate)
+            with eng.telemetry.span("flush_segment", "flush", take=take):
+                self._dstate = eng._flush(eng.params, self._dstate)
             self._pos = 0
         self._stage += 1
 

@@ -166,6 +166,12 @@ class _Slot:
     t_admit: float = 0.0
     t_first: Optional[float] = None
     n_concurrent: int = 1        # admissions in flight when this one started
+    # host mirror of the device-side in-segment position (DESIGN.md §13):
+    # seeded with the admission's pos, advanced one per emitted token, reset
+    # at seg_len — exactly the arithmetic decode_step/flush_segment run on
+    # device, so in-graph segment flushes are visible on the trace timeline
+    # without any device readback
+    pos: int = 0
 
 
 @dataclass
@@ -253,6 +259,8 @@ class ContinuousScheduler:
             self.active = jax.device_put(self.active, vec)
             self.remaining = jax.device_put(self.remaining, vec)
         self.slots = [_Slot() for _ in range(n_slots)]
+        self._armt_flush = (engine.serve_mode == "armt"
+                            and engine.cfg.armt is not None)
         self.free: deque = deque(range(n_slots))
         # the jitted step/admit/extract functions are cached on the engine
         # (keyed by chunk) so repeated serve() calls — and schedulers with
@@ -260,6 +268,14 @@ class ContinuousScheduler:
         # compiles
         self._chunk_fn, self._admit_fn, self._extract_fn = \
             scheduler_fns(engine, chunk)
+
+    @property
+    def tel(self):
+        """The engine's telemetry bundle (DESIGN.md §13) — resolved
+        dynamically so a caller swapping ``engine.telemetry`` between
+        serve() calls (the bench does) is picked up without rebuilding the
+        scheduler."""
+        return self.engine.telemetry
 
     # ------------------------------------------------------------------
     # Host-side driver
@@ -311,13 +327,16 @@ class ContinuousScheduler:
             # host arrays when they were captured sharded — commit them to
             # this engine's shardings (a device_put, not a host round-trip,
             # when they are already device-resident)
-            restored = self.engine._place_state(
-                {"prelude": entry.state["prelude"],
-                 "pattern": entry.state["pattern"]}, 1)
-            dstate = {**restored, "pos": jnp.asarray(entry.pos, jnp.int32)}
-            toks_in = np.concatenate([entry.pending, prompt])
-            logits, one_state, pos = self.engine._chunk(
-                dstate, jnp.asarray(toks_in[None]), entry.pos)
+            with self.tel.span("session_restore", "session",
+                               lane=str(req.req_id), session=req.session_id):
+                restored = self.engine._place_state(
+                    {"prelude": entry.state["prelude"],
+                     "pattern": entry.state["pattern"]}, 1)
+                dstate = {**restored,
+                          "pos": jnp.asarray(entry.pos, jnp.int32)}
+                toks_in = np.concatenate([entry.pending, prompt])
+                logits, one_state, pos = self.engine._chunk(
+                    dstate, jnp.asarray(toks_in[None]), entry.pos)
         else:
             # diagonal prefill of the new request alone (longest-prefix
             # cache hit inside _prefill when the engine carries one)
@@ -335,10 +354,12 @@ class ContinuousScheduler:
         (_finish_admission) admission, so the two modes cannot drift
         field-for-field (the token-identity invariant depends on it)."""
         first_tok = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
-        self.pool, self.tok, self.active, self.remaining = self._admit_fn(
-            self.pool, self.tok, self.active, self.remaining,
-            jnp.int32(slot), one_state, first_tok,
-            jnp.int32(pos), jnp.int32(req.max_new))
+        with self.tel.span("transplant", "transplant",
+                           lane=str(req.req_id), slot=slot):
+            self.pool, self.tok, self.active, self.remaining = self._admit_fn(
+                self.pool, self.tok, self.active, self.remaining,
+                jnp.int32(slot), one_state, first_tok,
+                jnp.int32(pos), jnp.int32(req.max_new))
         s = self.slots[slot]
         s.req_id, s.remaining, s.index, s.active, s.tokens = (
             req.req_id, req.max_new, 0, True, [])
@@ -347,7 +368,19 @@ class ContinuousScheduler:
                      else np.empty(0, np.int32))
         s.t_submit, s.t_admit, s.t_first = t_submit, t_admit, None
         s.n_concurrent = n_concurrent
-        self.admission_windows.append((t_admit, time.perf_counter()))
+        s.pos = int(pos)
+        t_end = time.perf_counter()
+        self.admission_windows.append((t_admit, t_end))
+        # retroactive span covering the whole admission window (start ->
+        # transplant landed), on the request's own lane — the trace-side
+        # twin of the admission_windows record the bench reads
+        self.tel.add_span("admission", "admission", t_admit, t_end,
+                          lane=str(req.req_id), slot=slot,
+                          queue_wait_s=t_admit - t_submit,
+                          concurrent=n_concurrent)
+        self.tel.inc("admissions_total")
+        self.tel.observe("queue_wait_s", t_admit - t_submit)
+        self.tel.observe("admission_window_s", t_end - t_admit)
 
     def _interleave(self) -> bool:
         """Interleaved admission needs the resumable pipeline's diagonal
@@ -444,6 +477,15 @@ class ContinuousScheduler:
         return toks, masks, frozenset(advanced)
 
     def _advance_admissions(self):
+        """Span-wrapped fairness round — every pooled admission round
+        (interleaved AND idle-drain) shows up on the trace timeline with
+        its pool size and launch mode."""
+        with self.tel.span("admission_round", "admission",
+                           n_adms=len(self._adms),
+                           fused=self.fused_admission):
+            return self._advance_admissions_inner()
+
+    def _advance_admissions_inner(self):
         """One fairness round over the in-flight admissions: every member
         advances one bounded unit — its k diagonal groups (same-signature
         members batched into one pooled launch) or one tail piece. With
@@ -493,20 +535,45 @@ class ContinuousScheduler:
         The scheduler's step consumes every emitted token (unlike
         generate's loop), so nothing is pending on resume."""
         s = self.slots[b]
-        row, pos, _pend = self._extract_fn(self.pool, self.tok, jnp.int32(b))
-        history = np.concatenate(
-            [s.history, s.prompt,
-             np.asarray(s.tokens, np.int32)]).astype(np.int32)
-        self.engine.session_store.put(
-            s.session_id, state=row, pos=int(np.asarray(pos)),
-            pending=np.empty(0, np.int32), tokens=history)
+        with self.tel.span("session_persist", "session",
+                           lane=str(s.req_id), session=s.session_id):
+            row, pos, _pend = self._extract_fn(self.pool, self.tok,
+                                               jnp.int32(b))
+            history = np.concatenate(
+                [s.history, s.prompt,
+                 np.asarray(s.tokens, np.int32)]).astype(np.int32)
+            self.engine.session_store.put(
+                s.session_id, state=row, pos=int(np.asarray(pos)),
+                pending=np.empty(0, np.int32), tokens=history)
 
     def _drain_chunk(self, toks, masks) -> Iterator[StreamEvent]:
         """Cross one chunk's token block to the host and stream its events
-        (the single device->host transfer for these ``chunk`` steps)."""
-        toks_np = np.asarray(toks)
-        masks_np = np.asarray(masks)
+        (the single device->host transfer for these ``chunk`` steps).
+
+        This is the telemetry piggyback point (DESIGN.md §13): the
+        ``decode_chunk`` span brackets exactly the two ``np.asarray``
+        transfers that already existed (so its duration is the
+        device-sync + copy wall time), per-request emit stamps and
+        per-chunk occupancy metrics are computed from the host copies, and
+        nothing else touches the device — the one-transfer-per-chunk
+        invariant is regression-tested with telemetry enabled."""
+        tel = self.tel
+        n_active = sum(1 for s in self.slots if s.active)
+        with tel.span("decode_chunk", "decode", steps=self.chunk,
+                      active_slots=n_active):
+            toks_np = np.asarray(toks)
+            masks_np = np.asarray(masks)
         now = time.perf_counter()
+        if tel.trace is not None:
+            for b, s in enumerate(self.slots):
+                if s.active:
+                    n = int(masks_np[:, b].sum())
+                    if n:
+                        tel.emit(s.req_id, now, n)
+        tel.observe("chunk_active_slots", n_active)
+        tel.observe("chunk_admissions_in_flight", len(self._adms))
+        tel.set_gauge("pool_occupancy", self.n_slots - len(self.free))
+        tel.sample_device_memory()
         for t in range(self.chunk):
             for b, s in enumerate(self.slots):
                 if not masks_np[t, b] or not s.active:
@@ -515,6 +582,16 @@ class ContinuousScheduler:
                 done = s.remaining == 0
                 tok = int(toks_np[t, b])
                 s.tokens.append(tok)
+                if self._armt_flush:
+                    # host pos mirror: the emitted token is the step's input,
+                    # so it advanced pos by one; >= seg_len means the jitted
+                    # chunk flushed this slot's segment at that step
+                    s.pos += 1
+                    if s.pos >= self.engine.seg_len:
+                        s.pos = 0
+                        tel.instant("segment_flush", "flush", t=now,
+                                    lane=str(s.req_id))
+                        tel.inc("decode_flushes_total")
                 first = s.t_first is None
                 if first:
                     s.t_first = now
@@ -623,6 +700,7 @@ class ContinuousScheduler:
                     self.engine.params, self.pool, self.tok,
                     self.active, self.remaining)
             if toks is not None:
+                self.tel.observe("chunk_queue_depth", len(queue))
                 yield from self._drain_chunk(toks, masks)
             elif self._adms:
                 # idle-drain: no decode slot is active, so there is no
@@ -636,7 +714,9 @@ class ContinuousScheduler:
                        and not any(s.active for s in self.slots)
                        and not (self.free and self._can_admit()
                                 and (queue or not exhausted))):
-                    self._advance_admissions()
+                    with self.tel.span("idle_drain_round", "idle",
+                                       pending=len(self._adms)):
+                        self._advance_admissions()
                     self.idle_drain_rounds += 1
             else:
                 if not queue and exhausted:
@@ -682,8 +762,11 @@ def _chunk_body_factory(cfg, serve_mode: str, seg_len: int, chunk: int):
             active = active & (remaining > 0)
             return (new_state, nxt, active, remaining), (emit, emit_mask)
 
-        (state, tok, active, remaining), (toks, masks) = jax.lax.scan(
-            body, (state, tok, active, remaining), None, length=chunk)
+        # named_scope: XLA profiles label this scan to match the host-side
+        # decode_chunk spans (DESIGN.md §13)
+        with jax.named_scope("serve.decode_chunk"):
+            (state, tok, active, remaining), (toks, masks) = jax.lax.scan(
+                body, (state, tok, active, remaining), None, length=chunk)
         return state, tok, active, remaining, toks, masks
 
     return chunk_fn
@@ -761,13 +844,14 @@ def fused_fns(engine, chunk: int, n_segments: int, capture: bool, k: int):
     buf_spec = engine._slot_spec(1)      # admissions are B=1
 
     def fused(params, state, tok, active, remaining, xs, carry):
-        state, tok, active, remaining, toks, masks = chunk_body(
-            params, state, tok, active, remaining)
-        exec_params = {"prelude": params["prelude"],
-                       "pattern": params["pattern"]}
-        carry = diag.pipeline_step(layout, exec_params, xs, carry, apply,
-                                   n_groups=k, buf_spec=buf_spec,
-                                   grouped_apply=gapply)
+        with jax.named_scope("serve.fused_global_grid"):
+            state, tok, active, remaining, toks, masks = chunk_body(
+                params, state, tok, active, remaining)
+            exec_params = {"prelude": params["prelude"],
+                           "pattern": params["pattern"]}
+            carry = diag.pipeline_step(layout, exec_params, xs, carry,
+                                       apply, n_groups=k, buf_spec=buf_spec,
+                                       grouped_apply=gapply)
         return state, tok, active, remaining, toks, masks, carry
 
     donate = (1, 2, 3, 4, 6) if jax.default_backend() != "cpu" else ()
@@ -800,10 +884,12 @@ def fused_pool_fns(engine, chunk: int, sigs: tuple):
               for (g, capture, k, n_pool) in sigs]
 
     def fused(params, state, tok, active, remaining, xs_bkts, carry_bkts):
-        state, tok, active, remaining, toks, masks = chunk_body(
-            params, state, tok, active, remaining)
-        out_bkts = tuple(body(params, xs_t, carry_t) for body, xs_t, carry_t
-                         in zip(bodies, xs_bkts, carry_bkts))
+        with jax.named_scope("serve.fused_global_grid"):
+            state, tok, active, remaining, toks, masks = chunk_body(
+                params, state, tok, active, remaining)
+            out_bkts = tuple(body(params, xs_t, carry_t)
+                             for body, xs_t, carry_t
+                             in zip(bodies, xs_bkts, carry_bkts))
         return state, tok, active, remaining, toks, masks, out_bkts
 
     donate = (1, 2, 3, 4, 6) if jax.default_backend() != "cpu" else ()
