@@ -1,0 +1,169 @@
+"""Kernel dispatch + autotune benchmark -> ``BENCH_kernels.json``
+(EXPERIMENTS.md §Kernels).
+
+Per kernel entry point (kernels/dispatch.OPS) at model-scale shapes (the
+bench_diagonal configuration: d_model 64, 4x16 heads, d_ff 128, group of 8
+layers, 128-token segments + 8 memory tokens):
+
+* sweeps the backend's config space through the Autotuner (paired timing)
+  and records the ranked table + the winning config — on CPU the space is
+  the XLA singleton by design, on TPU/GPU this is the real block-size sweep;
+* fills the dispatch disk cache, so serving processes on this machine
+  cold-start into the tuned winners;
+* times the XLA-native path against the same op forced through
+  pallas-interpret at small shapes — the measured reason dispatch sends CPU
+  to XLA instead of paying interpret overhead (ROADMAP item: the fused path
+  must win on the hardware it actually runs on, not just in kernel-land).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.kernels import dispatch
+from repro.kernels.autotune import Autotuner, run_op
+from repro.kernels.dispatch import KernelConfig
+from repro.serve.telemetry import default_registry
+
+G, T, D, HD, NH, NKV, DFF, M, DM, NU = 8, 136, 64, 16, 4, 4, 128, 8, 8, 3
+
+
+def _model_args(op: str, quick: bool):
+    """Model-scale operand sets (bench_diagonal dims; x4 rows when not
+    quick so CPU timings have signal)."""
+    t = T if quick else 4 * T
+    ks = jax.random.split(jax.random.PRNGKey(0), 10)
+    if op == "grouped_matmul":
+        return (jax.random.normal(ks[0], (G, t, D)),
+                jax.random.normal(ks[1], (G, D, 3 * NH * HD))), {}
+    if op == "grouped_matmul_armt_update":
+        P = 2 * NU * DM
+        return (jax.random.normal(ks[0], (G, t, DFF)) * 0.3,
+                jax.random.normal(ks[1], (G, DFF, D)) * 0.3,
+                jax.random.normal(ks[2], (G, t, D)) * 0.3,
+                jax.random.normal(ks[3], (G, D, DM)) * 0.3,
+                jax.random.normal(ks[4], (G, D, D)) * 0.3,
+                jax.random.normal(ks[5], (G, D, 1)) * 0.3,
+                jax.random.normal(ks[6], (G, P, D)) * 0.1,
+                jax.random.normal(ks[7], (G, P)) * 0.1), {"M": M, "nu": NU}
+    if op == "flash_attention":
+        # 5-D grouped-block layout [G, B, T, H, hd] — what the fused
+        # diagonal path dispatches, and the layout on which the CPU
+        # XLA-variant candidates (fast_softmax / causal_blocks) engage
+        return (jax.random.normal(ks[0], (G, 1, t, NH, HD)),
+                jax.random.normal(ks[1], (G, 1, t, NKV, HD)),
+                jax.random.normal(ks[2], (G, 1, t, NKV, HD))), {}
+    if op == "decode_attention":
+        B, S = 16, 1024 if not quick else 256
+        return (jax.random.normal(ks[0], (B, NH, HD)),
+                jax.random.normal(ks[1], (B, S, NKV, HD)),
+                jax.random.normal(ks[2], (B, S, NKV, HD)),
+                jnp.arange(1, B + 1, dtype=jnp.int32) * (S // B)), {}
+    if op == "armt_read":
+        P = 2 * NU * DM
+        return (jax.random.normal(ks[0], (G, t, D)),
+                jax.random.normal(ks[1], (D, DM)) * 0.3,
+                jax.random.normal(ks[2], (G, P, D)) * 0.1,
+                jax.random.uniform(ks[3], (G, P))), {"nu": NU}
+    if op == "armt_update":
+        P = 2 * NU * DM
+        return (jax.random.normal(ks[0], (G, M, D)),
+                jax.random.normal(ks[1], (D, DM)) * 0.3,
+                jax.random.normal(ks[2], (D, D)) * 0.3,
+                jax.random.normal(ks[3], (D, 1)) * 0.3,
+                jax.random.normal(ks[4], (G, P, D)) * 0.1,
+                jax.random.uniform(ks[5], (G, P))), {"nu": NU}
+    if op == "mamba_scan":
+        dS = 16
+        return (jax.random.normal(ks[0], (1, t, D)) * 0.5,
+                jax.nn.softplus(jax.random.normal(ks[1], (1, t, D))),
+                jax.random.normal(ks[2], (1, t, dS)) * 0.5,
+                jax.random.normal(ks[3], (1, t, dS)) * 0.5,
+                jnp.log(jnp.tile(jnp.arange(1., dS + 1)[None], (D, 1))),
+                jnp.ones(D),
+                jax.random.normal(ks[4], (1, D, dS)) * 0.1), {}
+    raise ValueError(op)
+
+
+def _tiny_args(op: str):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    if op == "grouped_matmul":
+        return (jax.random.normal(ks[0], (2, 32, 32)),
+                jax.random.normal(ks[1], (2, 32, 32))), {}
+    assert op == "armt_read"
+    P = 2 * NU * DM
+    return (jax.random.normal(ks[0], (2, 16, D)),
+            jax.random.normal(ks[1], (D, DM)) * 0.3,
+            jax.random.normal(ks[2], (2, P, D)) * 0.1,
+            jax.random.uniform(ks[3], (2, P))), {"nu": NU}
+
+
+def _interpret_overhead(op: str):
+    """XLA vs pallas-interpret seconds at tiny shapes: the measured basis
+    for the CPU heuristic row (dispatch sends cpu -> xla)."""
+    args, kw = _tiny_args(op)
+    interp_cfg = KernelConfig(impl="pallas", interpret=True)
+    xla = timeit(jax.jit(lambda *a: run_op(op, a, dispatch.XLA, **kw)),
+                 *args, warmup=1, iters=3)
+    interp = timeit(jax.jit(lambda *a: run_op(op, a, interp_cfg, **kw)),
+                    *args, warmup=1, iters=3)
+    return xla, interp
+
+
+def bench_kernels(quick: bool = True, out_path: str | None = None):
+    backend = jax.default_backend()
+    tuner = Autotuner(registry=default_registry())
+    results = []
+    for op in dispatch.OPS:
+        args, kw = _model_args(op, quick)
+        ranked = tuner.sweep(op, args, repeats=2 if quick else 5,
+                             op_kwargs=kw)
+        winner = tuner.get_or_tune(op, args, op_kwargs=kw)
+        rec = {
+            "op": op,
+            "key": tuner.key_for(op, args),
+            "winner": winner.to_json(),
+            "sweep": [{"config": c.to_json(), "s": t} for c, t in ranked],
+        }
+        if ranked:
+            row(f"kernel_{op}_best", ranked[0][1],
+                f"{len(ranked)} candidates impl={winner.impl}")
+        # quick mode times the interpret overhead for two representative
+        # ops only (interpret lowering is slow by design)
+        if op in ("grouped_matmul", "armt_read"):
+            xla_s, interp_s = _interpret_overhead(op)
+            rec["xla_s_tiny"] = xla_s
+            rec["pallas_interpret_s_tiny"] = interp_s
+            rec["interpret_overhead_x"] = interp_s / xla_s
+            row(f"kernel_{op}_interpret_overhead", interp_s,
+                f"{interp_s / xla_s:.0f}x vs xla")
+        results.append(rec)
+
+    out_path = out_path or os.environ.get("BENCH_KERNELS_OUT",
+                                          "BENCH_kernels.json")
+    payload = {
+        "bench": "kernel_autotune",
+        "backend": backend,
+        "cache_path": dispatch.default_cache_path(),
+        "model_dims": {"group": G, "seg_tokens": T, "d_model": D,
+                       "heads": f"{NH}x{HD}", "d_ff": DFF,
+                       "num_mem_tokens": M},
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    row("bench_kernels_json", 0.0, out_path)
+    return payload
+
+
+def main(quick: bool = True):
+    bench_kernels(quick)
+
+
+if __name__ == "__main__":
+    main(quick=False)

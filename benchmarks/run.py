@@ -9,6 +9,8 @@
   §Roofline bench_roofline          dry-run artifact aggregation
   §Perf    bench_diagonal           sequential vs diagonal-vmap vs
                                     diagonal-fused -> BENCH_diagonal.json
+  §Kernels bench_kernels            per-op autotune sweep + dispatch
+                                    decisions -> BENCH_kernels.json
   §Serving bench_serve              continuous-batching + prefix-cache +
                                     session workloads -> BENCH_serve.json
 
@@ -30,7 +32,7 @@ def main(argv=None) -> None:
                     help="run only these benches (by short name: "
                          "grouped_gemm, attention, inference_scaling, "
                          "error_accumulation, babilong, roofline, diagonal, "
-                         "serve); repeatable or comma-separated")
+                         "serve, kernels); repeatable or comma-separated")
     args = ap.parse_args(argv)
 
     quick = os.environ.get("QUICK", "1") != "0"
@@ -42,10 +44,11 @@ def main(argv=None) -> None:
     import benchmarks.bench_roofline as r
     import benchmarks.bench_diagonal as d
     import benchmarks.bench_serve as sv
+    import benchmarks.bench_kernels as kn
 
     by_name = {"grouped_gemm": g, "attention": a, "inference_scaling": i,
                "error_accumulation": e, "babilong": b, "roofline": r,
-               "diagonal": d, "serve": sv}
+               "diagonal": d, "serve": sv, "kernels": kn}
     mods = list(by_name.values())
     if args.only:
         names = [n.strip() for part in args.only for n in part.split(",")]

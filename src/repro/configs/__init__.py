@@ -94,6 +94,12 @@ class ArchConfig:
     # 'fused' launches the grouped Pallas kernels over the whole group
     # (models/grouped_blocks.py; forward/inference fast path).
     grouped_impl: str = "vmap"  # vmap | fused
+    # Kernel lowering for the fused path's op calls (kernels/dispatch.py):
+    # 'auto' lets the resolver pick per backend (autotune cache, then the
+    # heuristic table — XLA-native on CPU, Pallas on TPU/GPU); 'xla' and
+    # 'pallas' force the implementation; 'pallas_interpret' forces the
+    # kernel bodies under interpret-mode lowering (CPU validation).
+    kernel_backend: str = "auto"  # auto | xla | pallas | pallas_interpret
     source: str = ""           # provenance note
 
     @property
@@ -121,6 +127,8 @@ class ArchConfig:
     def validate(self) -> None:
         assert self.d_model > 0 and self.n_layers > 0 and self.vocab > 0
         assert self.grouped_impl in ("vmap", "fused"), self.grouped_impl
+        assert self.kernel_backend in (
+            "auto", "xla", "pallas", "pallas_interpret"), self.kernel_backend
         if any(t.startswith("attn") or t.startswith("dec") or t.startswith("enc")
                for t in self.layer_types):
             assert self.n_heads > 0 and self.n_kv_heads > 0

@@ -114,9 +114,39 @@ def _constrain_states_fn(buf_spec):
     return _constrain_states
 
 
+def _band_phases(S: int, L: int):
+    """Partition the S+L-1 anti-diagonal steps into phases of constant
+    *valid-slot band* size, for the banded fused driver.
+
+    At step i the valid slots form the contiguous band
+    [max(0, i-S+1), min(i, L-1)] — everything outside is fill/drain padding
+    the full-width body computes and throws away (up to (S+L-1)/S x wasted
+    cell-applies at small S). Each phase is ``(i0, n_steps, Gb, mode)``:
+    ``n_steps`` consecutive steps whose band is exactly ``Gb`` slots wide.
+    Exact widths mean the banded schedule executes exactly S*L cell
+    applies — the sequential executor's count — at the cost of
+    2*min(S, L) - 1 compiled step bodies (bounded by the layer count; the
+    earlier pow2 bucketing halved the body count but re-ran up to ~20%
+    padded cells, which is the wrong trade on every measured shape).
+
+    mode: 'fill' (band [0, i], growing one slot per step), 'drain' (band
+    ends at slot L-1, shrinking), 'mid' (constant width min(S, L): the
+    full stack when S >= L, else a band sliding with i).
+    """
+    m = min(S, L)
+    phases = []
+    for i in range(m - 1):                 # fill: band [0, i], width i+1
+        phases.append((i, 1, i + 1, "fill"))
+    phases.append((m - 1, max(S, L) - (m - 1), m, "mid"))
+    last = S + L - 2
+    for i in range(max(S, L), last + 1):   # drain: band [i-S+1, L-1]
+        phases.append((i, 1, S + L - 1 - i, "drain"))
+    return phases
+
+
 def _diag_body(layout: StackLayout, params: Dict, apply_block: ApplyBlock,
                n_segments: int, *, buf_spec=None, grouped_apply=None,
-               capture_states: bool = False):
+               capture_states: bool = False, band=None):
     """One anti-diagonal group as a pure step function
 
         body((buf, states), (seg_in, i)) -> ((buf_next, states_next), emit)
@@ -127,6 +157,13 @@ def _diag_body(layout: StackLayout, params: Dict, apply_block: ApplyBlock,
     the per-step recurrent-state capture when capture_states). Groups with
     ``i`` outside [0, S+L-2] are masked no-ops on the executor state: every
     slot is invalid, so states freeze and only the (ignored) buffer churns.
+
+    ``band=(Gb, mode)`` (single-position patterns, no prelude, no buf_spec)
+    selects the *banded* body: only a ``Gb``-slot slice around the valid
+    band is applied (``_band_phases``), skipping fill/drain padding compute.
+    Valid slots see identical inputs/params/state as the full-width body —
+    the per-slot math is group-size-independent — so outputs and state
+    updates are unchanged (tests/test_executors.py::test_banded_*).
     """
     S = n_segments
     L = layout.n_layers
@@ -135,6 +172,88 @@ def _diag_body(layout: StackLayout, params: Dict, apply_block: ApplyBlock,
     pos_slots = [np.asarray(layout.position_slots(p)) for p in range(P)]
     _constrain = _constrain_fn(buf_spec)
     _constrain_states = _constrain_states_fn(buf_spec)
+
+    if band is not None:
+        assert P == 1 and not layout.prelude and buf_spec is None, (
+            "banded body needs a single-position pattern, no prelude and "
+            "no slot sharding")
+        Gb, mode = band
+        t0 = layout.pattern[0]
+        # With exact band widths (_band_phases) every slot in the band is
+        # valid, so the body touches ONLY the band: no full-buffer
+        # seg-insert/validity selects, no full-width y materialization, no
+        # roll — the write target shifts one slot instead (y[l] lives at
+        # buf[l+1] next step; slots outside the write are zero or stale
+        # never-again-read fill residue). That drops the driver overhead
+        # from ~5 full [L,B,T,D] passes per step to ~1.
+        sliding = mode == "mid" and S < L      # band [i-S+1, i], start moves
+
+        def banded_step(carry, xs):
+            with jax.named_scope("diag.antidiagonal_banded"):
+                buf, states = carry
+                seg_in, i = xs
+                if mode == "drain":
+                    start = L - Gb
+                elif sliding:
+                    start = jnp.maximum(i - Gb + 1, 0)
+                else:                          # fill / full-width mid
+                    start = 0
+
+                def sl(a):
+                    return jax.lax.dynamic_slice_in_dim(a, start, Gb, axis=0)
+
+                xb = sl(buf)
+                if mode != "drain":
+                    # slot 0 takes the entering segment; it is in the band
+                    # exactly when start == 0 (static for fill/full mid,
+                    # first step only of a sliding mid)
+                    seg = seg_in.astype(buf.dtype)
+                    if sliding:
+                        row0 = jnp.where(start == 0, seg, xb[0])
+                    else:
+                        row0 = seg
+                    xb = jnp.concatenate([row0[None], xb[1:]], axis=0)
+                pb = jax.tree_util.tree_map(sl, params["pattern"][0])
+                sb = jax.tree_util.tree_map(sl, states["pattern"][0])
+                if grouped_apply is not None:
+                    yb, stb = grouped_apply(t0, pb, xb, sb)
+                else:
+                    grouped = jax.vmap(
+                        lambda pp, xx, ss: apply_block(t0, pp, xx, ss))
+                    yb, stb = grouped(pb, xb, sb)
+                new_p = jax.tree_util.tree_map(
+                    lambda full, b: jax.lax.dynamic_update_slice_in_dim(
+                        full, b.astype(full.dtype), start, axis=0),
+                    states["pattern"][0], stb)
+                new_states = {"prelude": states["prelude"],
+                              "pattern": (new_p,)}
+
+                yb = yb.astype(buf.dtype)
+                if mode == "fill":
+                    # band top is at most L-2: the whole band shifts down
+                    out = jnp.zeros_like(buf[0])    # no drain yet (discarded)
+                    buf_next = jax.lax.dynamic_update_slice_in_dim(
+                        jnp.zeros_like(buf), yb, 1, axis=0)
+                elif sliding:
+                    # drain emission only on the step whose band top is L-1
+                    out = jnp.where(start == L - Gb, yb[-1],
+                                    jnp.zeros_like(yb[-1]))
+                    # scatter into an (L+1)-row buffer so start+1 == L-Gb+1
+                    # (the last sliding step) stays in bounds, then trim
+                    buf_next = jax.lax.dynamic_update_slice_in_dim(
+                        jnp.zeros((L + 1,) + buf.shape[1:], buf.dtype),
+                        yb, start + 1, axis=0)[:L]
+                else:
+                    # drain / full-width mid: band top is L-1 — its output
+                    # drains out of the pipeline as this step's emission
+                    out = yb[-1]
+                    buf_next = jax.lax.dynamic_update_slice_in_dim(
+                        jnp.zeros_like(buf), yb[:-1], start + 1, axis=0)
+                emit = ((out, recurrent_state(new_states)) if capture_states
+                        else out)
+                return (buf_next, new_states), emit
+
+        return banded_step
 
     def diag_step(carry, xs):
         # named_scope: the anti-diagonal group shows up as one labeled
@@ -215,7 +334,7 @@ def _diag_body(layout: StackLayout, params: Dict, apply_block: ApplyBlock,
 def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
                  segments: jax.Array, apply_block: ApplyBlock,
                  *, remat: bool = False, buf_spec=None, grouped_apply=None,
-                 capture_states: bool = False):
+                 capture_states: bool = False, band_skip=None):
     """segments: [S, B, T, D] -> (ys [S, B, T, D], final_state).
 
     Same params/state structure as run_sequential — the two executors are
@@ -240,10 +359,27 @@ def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
     material for segment-boundary snapshots (boundary_states_from_capture,
     serve/state_store.py). Constant-size per step, so the extra scan output
     is (S+L-1) x the recurrent-state footprint, not activations.
+
+    band_skip: skip the fill/drain padding compute by running the schedule
+    in valid-band phases (``_band_phases``) instead of one full-width scan.
+    None (default) enables it exactly for the fused grouped path on
+    single-position patterns without prelude/sharding — the configuration
+    where the per-step grouped launch pays for every padded slot. The vmap
+    path stays on the full-width body (the untouched exactness/autodiff
+    oracle); results are equal either way.
     """
     S = segments.shape[0]
     L = layout.n_layers
     n_steps = S + L - 1
+    if band_skip is None:
+        band_skip = (grouped_apply is not None and len(layout.pattern) == 1
+                     and not layout.prelude and buf_spec is None and L > 1)
+    if band_skip:
+        assert len(layout.pattern) == 1 and not layout.prelude \
+            and buf_spec is None and L > 1, "band_skip unsupported here"
+        return _run_diagonal_banded(
+            layout, params, state0, segments, apply_block, remat=remat,
+            grouped_apply=grouped_apply, capture_states=capture_states)
 
     pad = jnp.zeros((L - 1,) + segments.shape[1:], segments.dtype)
     xs_seg = jnp.concatenate([segments, pad], axis=0) if L > 1 else segments
@@ -264,6 +400,54 @@ def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
         ys, captured = emitted
         return ys[L - 1:], final_state, captured
     return emitted[L - 1:], final_state
+
+
+def _run_diagonal_banded(layout: StackLayout, params: Dict, state0: Dict,
+                         segments: jax.Array, apply_block: ApplyBlock, *,
+                         remat: bool, grouped_apply, capture_states: bool):
+    """``run_diagonal`` as a sequence of valid-band phases: each phase is a
+    ``lax.scan`` whose step applies only a pow2-bucketed band of slots
+    around the valid diagonal (``_band_phases``), so the fill/drain padding
+    cells are never computed — total cell-applies drop from (S+L-1)*L
+    toward the sequential executor's S*L while keeping the grouped launch.
+    Emissions (and captures) from all phases concatenate to exactly the
+    [S+L-1] streams the one-shot scan produces."""
+    S = segments.shape[0]
+    L = layout.n_layers
+    pad = jnp.zeros((L - 1,) + segments.shape[1:], segments.dtype)
+    xs_seg = jnp.concatenate([segments, pad], axis=0)
+
+    carry = (jnp.zeros((L,) + segments.shape[1:], segments.dtype), state0)
+    ys_parts, cap_parts = [], []
+    for (i0, n, Gb, mode) in _band_phases(S, L):
+        body = _diag_body(layout, params, apply_block, S,
+                          grouped_apply=grouped_apply,
+                          capture_states=capture_states, band=(Gb, mode))
+        step_fn = jax.checkpoint(body) if remat else body
+        if n == 1:
+            # every fill/drain phase (and the mid phase when S == L) is a
+            # single step: call the body directly instead of a trip-count-1
+            # lax.scan. The step index becomes a static constant (so the
+            # band start folds at trace time) and XLA can fuse each phase's
+            # buffer scatter into the next phase's slice — a while loop is
+            # an optimization barrier and copies the carry both ways.
+            carry, emitted = step_fn(carry, (xs_seg[i0], i0))
+            emitted = jax.tree_util.tree_map(lambda a: a[None], emitted)
+        else:
+            carry, emitted = jax.lax.scan(
+                step_fn, carry, (xs_seg[i0:i0 + n], jnp.arange(i0, i0 + n)))
+        if capture_states:
+            ys_parts.append(emitted[0])
+            cap_parts.append(emitted[1])
+        else:
+            ys_parts.append(emitted)
+    ys = jnp.concatenate(ys_parts, axis=0)
+    final_state = carry[1]
+    if capture_states:
+        captured = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *cap_parts)
+        return ys[L - 1:], final_state, captured
+    return ys[L - 1:], final_state
 
 
 # ---------------------------------------------------------------------------

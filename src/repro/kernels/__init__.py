@@ -1,12 +1,17 @@
 """Pallas TPU kernels for the paper's hot spots (validated in interpret mode):
 
-  flash_attention — grouped/batched flash attention (paper §4.2: attention
-                    batched over the diagonal group dim)
-  grouped_matmul  — batched GEMM with VMEM tiling (paper §3.3 GroupedGEMM)
-  armt_memory     — fused associative read + delta-rule update (eqs. 3-6)
-  mamba_scan      — fused selective scan, h resident in VMEM
+  flash_attention  — grouped/batched flash attention (paper §4.2: attention
+                     batched over the diagonal group dim)
+  decode_attention — single-token decode against the serve KV cache
+                     (dynamic-length block skip; the serve hot path)
+  grouped_matmul   — batched GEMM with VMEM tiling (paper §3.3 GroupedGEMM)
+                     + the fused ARMT-memory-update epilogue variant
+  armt_memory      — fused associative read + delta-rule update (eqs. 3-6)
+  mamba_scan       — fused selective scan, h resident in VMEM
 
-``ops`` contains jit'd dispatch wrappers (kernel on TPU, jnp oracle on CPU);
-``ref`` contains the pure-jnp oracles used by the allclose test sweeps.
+``ops`` contains the jit'd entry points, routed through ``dispatch``
+(per-backend impl + tuning-config resolver; DESIGN.md §14); ``autotune``
+fills the dispatch cache offline; ``ref`` contains the pure-jnp oracles
+used by the allclose test sweeps.
 """
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref

@@ -1,0 +1,270 @@
+"""Offline kernel autotuner (DESIGN.md §14).
+
+Sweeps a backend-appropriate config space per op with *paired* timing
+(candidates interleaved round-robin across repeats, so clock drift and
+thermal state hit every candidate equally), bit-validates the winner in
+interpret mode against the kernels/ref.py oracle, and persists it to the
+dispatch layer's disk cache keyed ``(backend, op, shape-bucket, dtype)``.
+
+Strictly offline: the dispatch resolver called inside jit traces is a
+pure table lookup — this module is what fills the table. Run it from
+``benchmarks/bench_kernels.py`` (or a one-off script) on the target
+hardware; every later process cold-starts straight into the tuned
+winners via the disk cache.
+
+Registry counters (serve/telemetry.py default registry, or an injected
+one):
+
+* ``autotune_sweep_total{op}``        — timed candidate launches
+* ``autotune_cache_hit_total{op}``    — ``get_or_tune`` short-circuits
+  (the acceptance invariant: a second run with a warm cache performs
+  ZERO sweep launches)
+* ``autotune_validate_total{op,result}`` — winner validations
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.kernels import dispatch, ops, ref
+from repro.kernels.dispatch import KernelConfig
+
+# ---------------------------------------------------------------------------
+# Config spaces: (backend, op) -> candidate list. CPU spaces are singleton
+# XLA (there is nothing to tune — pallas-interpret is a validation tool);
+# the "interpret" pseudo-backend exercises the sweep machinery in tests.
+# ---------------------------------------------------------------------------
+
+
+def _gemm_space(impl: str, interpret: bool) -> List[KernelConfig]:
+    return [KernelConfig(impl=impl, interpret=interpret, block_m=bm,
+                         block_n=bn, block_k=bk)
+            for bm in (64, 128, 256)
+            for bn in (128, 256)
+            for bk in (128, 512)]
+
+
+def _flash_space(impl: str, interpret: bool) -> List[KernelConfig]:
+    return [KernelConfig(impl=impl, interpret=interpret, block_q=bq,
+                         block_k=bk)
+            for bq in (64, 128, 256)
+            for bk in (128, 256)]
+
+
+def config_space(op: str, backend: Optional[str] = None) -> List[KernelConfig]:
+    bk = dispatch.backend() if backend is None else backend
+    if bk == "cpu":
+        if op == "flash_attention":
+            # The XLA lowering itself has real knobs on CPU (ref.py,
+            # 5-D grouped layout): the unnormalized-softmax rewrite and
+            # the causal block skip. They compete against the plain
+            # oracle; winners still pass validate() (the deviation is
+            # one reassociation, ~1e-6, and the block skip is exact).
+            return [dispatch.XLA] + [
+                KernelConfig(impl="xla", fast_softmax=fs, causal_blocks=cb)
+                for fs in (False, True) for cb in (0, 2, 4, 8)
+                if fs or cb]
+        return [dispatch.XLA]
+    interp = bk == "interpret"
+    impl = "pallas"
+    if op in ("grouped_matmul", "grouped_matmul_armt_update"):
+        space = _gemm_space(impl, interp)
+        if op == "grouped_matmul_armt_update":
+            space = [dataclasses.replace(c, block_n=0, fuse_epilogue=f)
+                     for c in space for f in (True, False)]
+            # dedup (block_n collapsed)
+            space = list(dict.fromkeys(space))
+    elif op in ("flash_attention", "decode_attention"):
+        space = _flash_space(impl, interp)
+        if op == "decode_attention":
+            space = list(dict.fromkeys(
+                dataclasses.replace(c, block_q=0) for c in space))
+    elif op == "armt_read":
+        space = [KernelConfig(impl=impl, interpret=interp, block_t=bt,
+                              block_v=bv)
+                 for bt in (128, 256) for bv in (256, 512)]
+    elif op == "armt_update":
+        space = [KernelConfig(impl=impl, interpret=interp, block_v=bv)
+                 for bv in (256, 512)]
+    elif op == "mamba_scan":
+        space = [KernelConfig(impl=impl, interpret=interp, block_i=bi)
+                 for bi in (128, 256, 512)]
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    if not interp:
+        space = [dispatch.XLA] + space      # XLA-native always competes
+    return space
+
+
+# ---------------------------------------------------------------------------
+# Op runners: name -> fn(args, config) (ops.py wrappers with config forced)
+# ---------------------------------------------------------------------------
+
+_RUNNERS: Dict[str, Callable[..., Any]] = {
+    "grouped_matmul": lambda a, c, **kw: ops.grouped_gemm(*a, config=c, **kw),
+    "grouped_matmul_armt_update":
+        lambda a, c, **kw: ops.grouped_gemm_armt_update(*a, config=c, **kw),
+    "flash_attention": lambda a, c, **kw: ops.segment_attention(
+        *a, config=c, **kw),
+    "decode_attention": lambda a, c, **kw: ops.decode_attention(
+        *a, config=c, **kw),
+    "armt_read": lambda a, c, **kw: ops.assoc_read(*a, config=c, **kw),
+    "armt_update": lambda a, c, **kw: ops.assoc_update(*a, config=c, **kw),
+    "mamba_scan": lambda a, c, **kw: ops.selective_scan_fused(
+        *a, config=c, **kw),
+}
+
+def _flash_ref(q, k, v, **kw):
+    # route by layout like ops.segment_attention: 5-D grouped operands
+    # validate against the grouped oracle (default flags — the exact path)
+    if q.ndim == 5:
+        return ref.flash_attention_grouped_ref(q, k, v, **kw)
+    return ref.flash_attention_ref(q, k, v, **kw)
+
+
+_REFS: Dict[str, Callable[..., Any]] = {
+    "grouped_matmul": ref.grouped_matmul_ref,
+    "grouped_matmul_armt_update": ref.grouped_matmul_armt_update_ref,
+    "flash_attention": _flash_ref,
+    "decode_attention": ref.decode_attention_ref,
+    "armt_read": ref.armt_read_ref,
+    "armt_update": ref.armt_update_ref,
+    "mamba_scan": ref.mamba_scan_ref,
+}
+
+# key shapes for the dispatch cache key, per op: indices of args whose
+# shapes key the bucket (matches what ops.py passes to resolve())
+_KEY_ARGS: Dict[str, Tuple[int, ...]] = {
+    "grouped_matmul": (0, 1),
+    "grouped_matmul_armt_update": (0, 1, 6),
+    "flash_attention": (0, 1),
+    "decode_attention": (0, 1),
+    "armt_read": (0, 2),
+    "armt_update": (0, 4),
+    "mamba_scan": (0, 2),
+}
+
+
+def run_op(op: str, args: Sequence[Any], config: KernelConfig, **kw):
+    return _RUNNERS[op](tuple(args), config, **kw)
+
+
+class Autotuner:
+    """Sweeps config spaces and fills the dispatch cache.
+
+    ``cache_path=None`` uses the dispatch layer's default disk location;
+    pass an explicit path in tests. ``persist=False`` keeps winners
+    in-memory only (the dispatch table still serves them this process).
+    """
+
+    def __init__(self, cache_path: Optional[str] = None, *,
+                 registry=None, persist: bool = True):
+        if cache_path is not None:
+            dispatch.set_cache_path(cache_path)
+        self.persist = persist
+        if registry is None:
+            from repro.serve.telemetry import default_registry
+            registry = default_registry()
+        self.registry = registry
+
+    # -- timing ---------------------------------------------------------
+
+    @staticmethod
+    def _time_once(fn: Callable[[], Any]) -> float:
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        return time.perf_counter() - t0
+
+    def sweep(self, op: str, args: Sequence[Any], *,
+              backend: Optional[str] = None, repeats: int = 3,
+              op_kwargs: Optional[Dict[str, Any]] = None
+              ) -> List[Tuple[KernelConfig, float]]:
+        """Time every candidate, paired: one warmup (compile) per
+        candidate, then ``repeats`` rounds visiting every candidate per
+        round. Returns (config, best_seconds) sorted fastest-first;
+        candidates that fail to lower/validate shape constraints are
+        dropped."""
+        kw = op_kwargs or {}
+        args = tuple(args)
+        cands: List[KernelConfig] = []
+        fns: List[Callable[[], Any]] = []
+        times: List[List[float]] = []
+        for cand in config_space(op, backend):
+            # jit the whole closure so XLA-native candidates compete as a
+            # compiled program, not an eager jnp trace per call; operands
+            # stay jit *arguments* (a zero-arg closure would let XLA
+            # constant-fold the op away and time nothing)
+            jitted = jax.jit(lambda *a, c=cand: run_op(op, a, c, **kw))
+            fn = lambda f=jitted: f(*args)
+            try:
+                jax.block_until_ready(fn())
+            except Exception:
+                continue                     # unlowerable on these shapes
+            cands.append(cand)
+            fns.append(fn)
+            times.append([])
+        for _ in range(repeats):
+            for i, fn in enumerate(fns):
+                times[i].append(self._time_once(fn))
+                self.registry.inc("autotune_sweep_total", op=op)
+        ranked = sorted(zip(cands, (min(ts) for ts in times)),
+                        key=lambda p: p[1])
+        return ranked
+
+    # -- validation -----------------------------------------------------
+
+    def validate(self, op: str, args: Sequence[Any], config: KernelConfig,
+                 *, op_kwargs: Optional[Dict[str, Any]] = None,
+                 atol: float = 2e-4, rtol: float = 2e-3) -> bool:
+        """Bit-validate ``config`` against the jnp oracle: pallas configs
+        run in interpret mode (the kernel body, exactly, on CPU)."""
+        kw = op_kwargs or {}
+        cfg = (dataclasses.replace(config, interpret=True)
+               if config.impl == "pallas" else config)
+        got = run_op(op, args, cfg, **kw)
+        want = _REFS[op](*args, **kw)
+        try:
+            jax.tree_util.tree_map(
+                lambda a, b: np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    atol=atol, rtol=rtol), got, want)
+            ok = True
+        except AssertionError:
+            ok = False
+        self.registry.inc("autotune_validate_total", op=op,
+                          result="pass" if ok else "fail")
+        return ok
+
+    # -- the public entry ----------------------------------------------
+
+    def key_for(self, op: str, args: Sequence[Any],
+                backend: Optional[str] = None) -> str:
+        shapes = [tuple(args[i].shape) for i in _KEY_ARGS[op]]
+        bk = dispatch.backend() if backend is None else backend
+        return dispatch.cache_key(bk, op, shapes, args[0].dtype)
+
+    def get_or_tune(self, op: str, args: Sequence[Any], *,
+                    backend: Optional[str] = None, repeats: int = 3,
+                    op_kwargs: Optional[Dict[str, Any]] = None
+                    ) -> KernelConfig:
+        """Warm path: cached winner, zero launches. Cold path: sweep,
+        validate the winner (falling through to the next-fastest candidate
+        on a validation failure), store, return."""
+        key = self.key_for(op, args, backend)
+        hit = dispatch.cached_config(key)
+        if hit is not None:
+            self.registry.inc("autotune_cache_hit_total", op=op)
+            return hit
+        ranked = self.sweep(op, args, backend=backend, repeats=repeats,
+                            op_kwargs=op_kwargs)
+        if not ranked:
+            return dispatch.heuristic(op, backend)
+        for cand, _t in ranked:
+            if self.validate(op, args, cand, op_kwargs=op_kwargs):
+                dispatch.store_config(key, cand, persist=self.persist)
+                return cand
+        return dispatch.heuristic(op, backend)

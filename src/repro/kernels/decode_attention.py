@@ -1,0 +1,102 @@
+"""Single-token decode attention — Pallas TPU kernel (the serve hot path).
+
+One query token per row against a paged-in KV cache prefix: q [B, Hq, hd]
+vs. cache k/v [B, S, Hkv, hd] (the serve-stack cache layout — no
+transpose on the way in) with per-row valid lengths [B]. Grid (B, Hq);
+online softmax streams the cache in [block_k, hd] tiles and the time loop
+stops at the row's length (``fori_loop`` upper bound is dynamic — blocks
+past the valid prefix are never touched, so a 32-token-deep slot in a
+64k-slot cache reads one tile, not 512).
+
+GQA via the BlockSpec index map (kv head = q head // rep), like
+flash_attention.py. Sliding window masks keys below ``qpos - window``
+(qpos = length - 1) — decode is causal by construction, so there is no
+upper bound to mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, sm_scale: float,
+                   window: int, block_k: int):
+    # q: [hd]; k/v: [S, hd]; len: [1]; o: [hd]
+    hd = q_ref.shape[0]
+    S = k_ref.shape[0]
+    length = len_ref[0]
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+
+    def body(ik, carry):
+        m_i, l_i, acc = carry
+        start_k = ik * block_k
+        k = k_ref[pl.dslice(start_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(start_k, block_k), :].astype(jnp.float32)
+        s = k @ q                                            # [bk]
+        k_pos = start_k + jax.lax.iota(jnp.int32, block_k)
+        mask = k_pos < length
+        if window > 0:
+            mask &= k_pos > (length - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max())
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + p.sum()
+        acc_new = acc * alpha + p @ v
+        return m_new, l_new, acc_new
+
+    if window > 0:
+        k_start = jnp.maximum(0, (length - window) // block_k)
+    else:
+        k_start = 0
+    n_k_eff = jnp.minimum(pl.cdiv(S, block_k),
+                          pl.cdiv(length, block_k))
+    m_i, l_i, acc = jax.lax.fori_loop(
+        k_start, n_k_eff, body,
+        (jnp.float32(NEG_INF), jnp.float32(0.0), jnp.zeros((hd,), jnp.float32)))
+    o_ref[...] = (acc / jnp.maximum(l_i, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q, k, v, lengths, *, window: int = 0,
+                     block_k: int = 128, interpret: bool = False):
+    """q: [B, Hq, hd]; k/v: [B, S, Hkv, hd] (cache layout); lengths: [B]
+    int32 (valid prefix incl. the current token) -> [B, Hq, hd]."""
+    B, Hq, hd = q.shape
+    _, S, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    block_k = min(block_k, S)
+    sm_scale = hd ** -0.5
+    lengths = lengths.astype(jnp.int32).reshape(B, 1)
+
+    # zero-pad a ragged cache length so the last dslice tile is not read
+    # through clamping; pad keys are masked via the per-row length
+    S_pad = pl.cdiv(S, block_k) * block_k
+    if S_pad != S:
+        k = jnp.pad(k, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+        S = S_pad
+
+    grid = (B, Hq)
+    kernel = functools.partial(_decode_kernel, sm_scale=sm_scale,
+                               window=window, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, hd), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((None, S, None, hd), lambda b, h: (b, 0, h // rep, 0)),
+            pl.BlockSpec((None, S, None, hd), lambda b, h: (b, 0, h // rep, 0)),
+            pl.BlockSpec((None, 1), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, hd), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v, lengths)

@@ -11,7 +11,8 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import apply_rope, rope_cos_sin, rmsnorm
+from repro.models.layers import (apply_rope, rope_cos_sin,
+                                 rope_cos_sin_cached, rmsnorm)
 
 NEG_INF = -1e30
 
@@ -52,16 +53,30 @@ def _project_qkv(x, p, cfg):
     return q, k, v
 
 
-def rope_qk(q, k, cfg, positions=None):
+def rope_qk(q, k, cfg, positions=None, *, cached_tables: bool = False):
     """Apply RoPE to q/k [..., T, H, hd] from one shared cos/sin table.
     Used by both the reference attention path and the fused grouped-block
-    path (models/grouped_blocks.py) so the rotary math is bit-identical."""
+    path (models/grouped_blocks.py) so the rotary math is bit-identical.
+
+    cached_tables: with segment-local positions, take the cos/sin table
+    from the eager per-shape cache (rope_cos_sin_cached) so it embeds as
+    one on-device constant shared by every compiled step body — what the
+    banded diagonal driver's single-step phase programs need. The values
+    are bitwise-identical, but a constant table changes XLA's fusion
+    choices, which perturbs ulps elsewhere in the program — so the flag
+    stays off on the reference/training paths to keep their compiled
+    programs exactly as before (the fused path re-verifies equivalence
+    against them at fp32 tolerance, tests/test_grouped_blocks.py)."""
     if not cfg.use_rope:
         return q, k
-    if positions is None:
-        positions = jnp.arange(q.shape[-3])[None]
     d_rot = int(cfg.head_dim * cfg.rope_fraction)
-    cos, sin = rope_cos_sin(positions, d_rot - d_rot % 2, cfg.rope_theta)
+    if positions is None and cached_tables:
+        cos, sin = rope_cos_sin_cached(q.shape[-3], d_rot - d_rot % 2,
+                                       cfg.rope_theta)
+    else:
+        if positions is None:
+            positions = jnp.arange(q.shape[-3])[None]
+        cos, sin = rope_cos_sin(positions, d_rot - d_rot % 2, cfg.rope_theta)
     return (apply_rope(q, cos, sin, cfg.rope_fraction),
             apply_rope(k, cos, sin, cfg.rope_fraction))
 
@@ -234,6 +249,16 @@ def decode_attention(x, p, cfg, cache: Dict, pos: jax.Array):
         if cfg.sliding_window > 0:
             mask &= kpos > (qpos - cfg.sliding_window)
         mask = mask[None, None]
-    o = sdpa(q, ck, cv, mask)
+    if getattr(cfg, "attn_impl", "dense") == "pallas" and Tq == 1:
+        # single-token serve hot path: the dedicated decode kernel
+        # (kernels/decode_attention.py) reads only the valid cache prefix
+        from repro.kernels import ops as kops
+        lens = (pos if per_slot else jnp.full((B,), pos, jnp.int32)) + 1
+        o = kops.decode_attention(q[:, 0], ck, cv, lens,
+                                  window=cfg.sliding_window,
+                                  use_kernel=True,
+                                  interpret=not kops.on_tpu())[:, None]
+    else:
+        o = sdpa(q, ck, cv, mask)
     o = o.reshape(B, Tq, cfg.n_heads * cfg.head_dim)
     return jnp.einsum("bte,ed->btd", o, p["wo"]), {"k": ck, "v": cv}

@@ -77,17 +77,26 @@ def make_grouped_apply(cfg, *, mode: str = "segmented",
     armt_on = cfg.armt is not None and mode == "segmented"
     M = cfg.armt.num_mem_tokens if armt_on else 0
     nu = cfg.armt.nu if armt_on else 3
+    # cfg-level kernel_backend knob (configs/__init__.py) maps onto the
+    # per-call overrides unless the caller set them explicitly — the
+    # dispatch resolver (kernels/dispatch.py) sees one consistent decision
+    # from forward_hidden and ServeEngine.exec_apply alike
+    kb = getattr(cfg, "kernel_backend", "auto")
+    if use_kernel is None and kb != "auto":
+        use_kernel = kb != "xla"
+        if interpret is None and kb == "pallas_interpret":
+            interpret = True
     kw = dict(use_kernel=use_kernel, interpret=interpret)
 
     def fallback(t, p, x, st):
         return jax.vmap(lambda pp, xx, ss, _t=t: base(_t, pp, xx, ss))(p, x, st)
 
     def gg(h, w, bias=None, act=None):
-        # h: [G, B, T, Din] @ w: [G, Din, Dout] as one grouped GEMM
-        G, B, T, _ = h.shape
-        out = kops.grouped_gemm(h.reshape(G, B * T, h.shape[-1]), w, bias,
-                                activation=act, **kw)
-        return out.reshape(G, B, T, out.shape[-1])
+        # h: [G, B, T, Din] @ w: [G, Din, Dout] as one grouped GEMM — the
+        # 4-D layout goes through un-flattened (kops keeps it on the XLA
+        # branch: the fast CPU lowering; the pallas branch flattens at the
+        # kernel boundary)
+        return kops.grouped_gemm(h, w, bias, activation=act, **kw)
 
     def snorm(h, p):
         # per-layer norm weights [G, D] broadcast against h [G, B, T, D];
@@ -114,24 +123,47 @@ def make_grouped_apply(cfg, *, mode: str = "segmented",
         if cfg.qk_norm:
             q = rmsnorm(q, {"w": pa["qn"]["w"][:, None, None, None, :]})
             k = rmsnorm(k, {"w": pa["kn"]["w"][:, None, None, None, :]})
-        q, k, v = (a.reshape((N, T) + a.shape[3:]) for a in (q, k, v))
-        q, k = rope_qk(q, k, cfg)
-        o = kops.segment_attention(
-            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
-            causal=True, window=cfg.sliding_window, **kw)
-        o = o.swapaxes(1, 2).reshape(G, B, T, nq * hd)
+        # cached_tables: the cos/sin constants are shared by every banded
+        # phase body (bitwise-equal values, but the constant shifts XLA
+        # fusion ulps — see rope_qk), so like the dispatched attention
+        # lowerings it stays off the use_kernel=False exactness-oracle
+        # path, which must compile the same program as the vmap reference
+        q, k = rope_qk(q, k, cfg, cached_tables=use_kernel is not False)
+        # stay in the 5-D [G,B,T,H,hd] layout: the XLA branch runs the
+        # (g,b,h)-batched dot directly (the fast CPU lowering, identical
+        # to what the vmap path produces) and only the pallas branch pays
+        # the flatten/transpose at the kernel boundary
+        o = kops.segment_attention(q, k, v, causal=True,
+                                   window=cfg.sliding_window, **kw)
+        o = o.reshape(G, B, T, nq * hd)
         h = x + gg(o, pa["wo"])
 
+        # With B == 1 (the serving/admission layout) the ARMT update can
+        # ride the last GEMM's epilogue: the memory tokens are the final M
+        # rows of the flattened [G, B*T, D] output, so one
+        # grouped_gemm_armt_update launch replaces down-proj + update (the
+        # two separate per-anti-diagonal-cell launches). B > 1 interleaves
+        # batch rows, so the fused epilogue cannot see per-batch tails —
+        # fall back to the two-launch path there.
+        fuse_update = armt_on and M > 0 and B == 1 and "ffn" in p
         if "ffn" in p:
             h2 = snorm(h, p["ln2"])
             pf = p["ffn"]
             if cfg.act == "silu":       # swiglu: silu epilogue on the gate
                 gate = gg(h2, pf["wg"], act="silu")
                 up = gg(h2, pf["wu"])
-                y = h + gg(gate * up, pf["wd"])
+                last_in, last_w, last_b = gate * up, pf["wd"], None
             else:                       # gelu MLP: bias + act epilogue
                 mid = gg(h2, pf["wi"], pf.get("bi"), act="gelu")
-                y = h + gg(mid, pf["wo"], pf.get("bo"))
+                last_in, last_w, last_b = mid, pf["wo"], pf.get("bo")
+            if fuse_update:
+                y2, A2, z2 = kops.grouped_gemm_armt_update(
+                    last_in, last_w, h, p["mem"]["wk"], p["mem"]["wv"],
+                    p["mem"]["wb"], A_f, z_f, last_b, M=M, nu=nu, **kw)
+                new_state["A"] = A2.reshape(state["A"].shape)
+                new_state["z"] = z2.reshape(state["z"].shape)
+                return y2, new_state
+            y = h + gg(last_in, last_w, last_b)
         else:
             y = h
 

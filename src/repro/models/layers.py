@@ -1,6 +1,8 @@
 """Elementary layers: norms, RoPE, MLPs, embeddings. Pure functions on pytrees."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -44,6 +46,21 @@ def rope_cos_sin(positions: jax.Array, d_rot: int, theta: float):
     inv = 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
     ang = positions.astype(jnp.float32)[..., None] * inv       # [...,T,d_rot/2]
     return jnp.cos(ang), jnp.sin(ang)
+
+
+@functools.lru_cache(maxsize=64)
+def rope_cos_sin_cached(T: int, d_rot: int, theta: float):
+    """Segment-local rope table (positions = arange(T)), computed eagerly
+    once per (T, d_rot, theta) and cached. The returned arrays embed as
+    on-device constants when closed over by a jit trace, so the diagonal
+    executor's many single-step phase bodies share one table instead of
+    re-deriving the trig per compiled step (loop-invariant-code-motion only
+    rescues the multi-step mid phases; fill/drain bodies have no loop).
+    Bitwise-identical to ``rope_cos_sin(jnp.arange(T)[None], ...)`` — same
+    XLA elementwise chain, just run ahead of time (compile-time eval keeps
+    it concrete even when first called under an active trace)."""
+    with jax.ensure_compile_time_eval():
+        return rope_cos_sin(jnp.arange(T)[None], d_rot, theta)
 
 
 def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,

@@ -447,7 +447,17 @@ class ServeEngine:
         through ``forward_hidden``'s defaults. ``prefill_step`` and the
         scheduler's ``fused_fns`` both build their diagonal stages from
         this, so the interleaved==blocking bit-identity cannot be broken
-        by one copy drifting."""
+        by one copy drifting.
+
+        Kernel lowering rides the same single source of truth: the fused
+        grouped_apply's op calls resolve their implementation + tuning
+        config through ``kernels/dispatch.py`` (honoring
+        ``cfg.kernel_backend``, the autotune cache, and the per-backend
+        heuristic table), so the scheduler's pooled launches and
+        ``forward_hidden`` dispatch through one resolver — the
+        ``kernel_dispatch_total{op,impl,backend,source}`` counters land
+        in this engine's metrics registry (it defaults to the process
+        registry the resolver writes to)."""
         from repro.models.blocks import make_apply_block
         from repro.models.grouped_blocks import resolve_grouped_apply
         apply = make_apply_block(self.cfg, mode="segmented",

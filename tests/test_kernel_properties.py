@@ -1,0 +1,194 @@
+"""Property sweeps for every kernel: f32/bf16 × non-aligned shapes (odd
+M/N/K, head_dim not a multiple of the block, ragged tile edges forced via
+small explicit block configs) against the kernels/ref.py oracles — plus
+the masked-vs-skipped equivalence gate for the sliding-window block-skip
+bounds (must be BITWISE: a skipped block that wasn't fully masked would
+show up as a real difference, not rounding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.dispatch import KernelConfig
+from repro.kernels.flash_attention import flash_attention
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 5e-2}
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _close(a, b, dtype):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32),
+        atol=ATOL[dtype], rtol=ATOL[dtype] * 10)
+
+
+def _pcfg(**blocks):
+    return KernelConfig(impl="pallas", interpret=True, **blocks)
+
+
+# ------------------------------------------------------------- grouped GEMM
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("G,M,K,N", [(3, 37, 29, 53), (2, 17, 160, 96),
+                                     (1, 63, 31, 65)])
+def test_grouped_matmul_nonaligned(G, M, K, N, dtype):
+    """Odd M/N/K with 16-wide blocks: every grid edge is ragged."""
+    ks = jax.random.split(jax.random.PRNGKey(M * N + K), 3)
+    x = jax.random.normal(ks[0], (G, M, K), dtype)
+    w = jax.random.normal(ks[1], (G, K, N), dtype)
+    b = jax.random.normal(ks[2], (G, N), dtype)
+    out = ops.grouped_gemm(x, w, b, activation="silu",
+                           config=_pcfg(block_m=16, block_n=16, block_k=16))
+    _close(out, ref.grouped_matmul_ref(x, w, b, activation="silu"), dtype)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("R,K,D,M,block_m", [
+    (19, 13, 24, 3, 8),     # ragged last tile, mem rows inside it
+    (24, 32, 16, 4, 256),   # single tile
+    (19, 13, 24, 4, 8),     # mem rows straddle -> ops falls back, still ok
+])
+def test_grouped_matmul_armt_update_nonaligned(R, K, D, M, block_m, dtype):
+    """The fused ARMT-epilogue GEMM across ragged tiles and the
+    constraint-violating fallback path."""
+    G, dm, nu = 2, 4, 3
+    P = 2 * nu * dm
+    ks = jax.random.split(jax.random.PRNGKey(R + D), 9)
+    x = (jax.random.normal(ks[0], (G, R, K)) * 0.3).astype(dtype)
+    w = (jax.random.normal(ks[1], (G, K, D)) * 0.3).astype(dtype)
+    res = (jax.random.normal(ks[2], (G, R, D)) * 0.3).astype(dtype)
+    wk = (jax.random.normal(ks[3], (G, D, dm)) * 0.3).astype(dtype)
+    wv = (jax.random.normal(ks[4], (G, D, D)) * 0.3).astype(dtype)
+    wb = (jax.random.normal(ks[5], (G, D, 1)) * 0.3).astype(dtype)
+    A = jax.random.normal(ks[6], (G, P, D)) * 0.1
+    z = jax.random.normal(ks[7], (G, P)) * 0.1
+    bias = (jax.random.normal(ks[8], (G, D)) * 0.3).astype(dtype)
+    got = ops.grouped_gemm_armt_update(
+        x, w, res, wk, wv, wb, A, z, bias, M=M, nu=nu,
+        config=_pcfg(block_m=block_m, block_k=8))
+    want = ref.grouped_matmul_armt_update_ref(x, w, res, wk, wv, wb, A, z,
+                                              bias, M=M, nu=nu)
+    for g, r in zip(got, want):
+        _close(g, r, dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("Hq,Hkv,T,hd,causal,window", [
+    (4, 2, 37, 24, True, 0),     # GQA, ragged T, hd needs 128-pad
+    (3, 1, 29, 40, True, 11),    # MQA + window, odd everything
+    (2, 2, 33, 24, False, 9),    # symmetric (non-causal) window
+])
+def test_flash_attention_nonaligned(Hq, Hkv, T, hd, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(T * hd), 3)
+    q = jax.random.normal(ks[0], (2, Hq, T, hd), dtype)
+    k = jax.random.normal(ks[1], (2, Hkv, T, hd), dtype)
+    v = jax.random.normal(ks[2], (2, Hkv, T, hd), dtype)
+    out = ops.segment_attention(q, k, v, causal=causal, window=window,
+                                config=_pcfg(block_q=16, block_k=16))
+    _close(out, ref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window), dtype)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("Hq,Hkv,S,hd,window", [
+    (4, 2, 37, 24, 0), (2, 1, 61, 16, 0), (4, 4, 45, 24, 7),
+])
+def test_decode_attention_nonaligned(Hq, Hkv, S, hd, window, dtype):
+    """Single-token decode kernel: ragged cache lengths per row, GQA,
+    non-128 head dim (padded by the ops wrapper)."""
+    B = 3
+    ks = jax.random.split(jax.random.PRNGKey(S + hd), 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), dtype)
+    lens = jnp.array([1, S // 2 + 1, S], jnp.int32)
+    out = ops.decode_attention(q, k, v, lens, window=window,
+                               config=_pcfg(block_k=8))
+    _close(out, ref.decode_attention_ref(q, k, v, lens, window=window),
+           dtype)
+
+
+# -------------------------------------------------------------- ARMT memory
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("T,D,dm,Dv,M", [(19, 24, 4, 40, 3),
+                                         (33, 48, 8, 24, 5)])
+def test_armt_kernels_nonaligned(T, D, dm, Dv, M, dtype):
+    N, P = 3, 6 * dm
+    ks = jax.random.split(jax.random.PRNGKey(T + Dv), 8)
+    x = jax.random.normal(ks[0], (N, T, D), dtype)
+    wq = (jax.random.normal(ks[1], (D, dm)) * 0.3).astype(dtype)
+    A = jax.random.normal(ks[2], (N, P, Dv)) * 0.1
+    z = jax.random.uniform(ks[3], (N, P))
+    out = ops.assoc_read(x, wq, A, z, config=_pcfg(block_t=8, block_v=16))
+    _close(out, ref.armt_read_ref(x, wq, A, z), dtype)
+
+    m = jax.random.normal(ks[4], (N, M, D), dtype)
+    wk = (jax.random.normal(ks[5], (D, dm)) * 0.3).astype(dtype)
+    wv = (jax.random.normal(ks[6], (D, Dv)) * 0.3).astype(dtype)
+    wb = (jax.random.normal(ks[7], (D, 1)) * 0.3).astype(dtype)
+    A2, z2 = ops.assoc_update(m, wk, wv, wb, A, z, config=_pcfg(block_v=16))
+    Ar, zr = ref.armt_update_ref(m, wk, wv, wb, A, z)
+    _close(A2, Ar, dtype)
+    _close(z2, zr, dtype)
+
+
+# --------------------------------------------------------------- mamba scan
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("T,dI,dS", [(9, 24, 4), (17, 40, 8)])
+def test_mamba_scan_nonaligned(T, dI, dS, dtype):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(T + dI), 5)
+    x = (jax.random.normal(ks[0], (B, T, dI)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, dI))).astype(dtype)
+    Bt = (jax.random.normal(ks[2], (B, T, dS)) * 0.5).astype(dtype)
+    Ct = (jax.random.normal(ks[3], (B, T, dS)) * 0.5).astype(dtype)
+    A_log = jnp.log(jnp.tile(jnp.arange(1., dS + 1)[None], (dI, 1)))
+    D = jnp.ones(dI)
+    h0 = jax.random.normal(ks[4], (B, dI, dS)) * 0.1
+    y, hT = ops.selective_scan_fused(x, dt, Bt, Ct, A_log, D, h0,
+                                     config=_pcfg(block_i=16))
+    yr, hr = ref.mamba_scan_ref(x, dt, Bt, Ct, A_log, D, h0)
+    _close(y, yr, dtype)
+    _close(hT, hr, dtype)
+
+
+# ------------------------------------------- masked-vs-skipped equivalence
+
+@pytest.mark.parametrize("causal,window", [
+    (True, 0), (True, 24), (True, 7), (False, 24), (False, 7),
+])
+def test_window_skip_equals_mask(causal, window):
+    """The block-skip bounds (causal diagonal, window lower bound, and the
+    new non-causal window *upper* bound) must be pure work elimination:
+    skip_blocks=True and =False agree BITWISE, ragged shapes included."""
+    ks = jax.random.split(jax.random.PRNGKey(window + causal), 3)
+    q = jax.random.normal(ks[0], (1, 2, 200, 128))
+    k = jax.random.normal(ks[1], (1, 2, 200, 128))
+    v = jax.random.normal(ks[2], (1, 2, 200, 128))
+    skip = flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=32, block_k=16, interpret=True,
+                           skip_blocks=True)
+    mask = flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=32, block_k=16, interpret=True,
+                           skip_blocks=False)
+    np.testing.assert_array_equal(np.asarray(skip), np.asarray(mask))
+    _close(skip, ref.flash_attention_ref(q, k, v, causal=causal,
+                                         window=window), jnp.float32)
+
+
+def test_decode_skip_equals_full_scan():
+    """The decode kernel's dynamic length bound reads fewer tiles but must
+    match the oracle that sees (and masks) the whole cache."""
+    B, Hq, Hkv, S, hd = 2, 2, 2, 128, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, Hq, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    lens = jnp.array([5, 77], jnp.int32)
+    out = ops.decode_attention(q, k, v, lens, config=_pcfg(block_k=16))
+    _close(out, ref.decode_attention_ref(q, k, v, lens), jnp.float32)
