@@ -15,7 +15,7 @@ import os
 
 import jax
 
-from benchmarks.common import row, timeit
+from benchmarks.common import compiled_memory_stats, row, timeit
 from repro.configs import ARMTConfig, get_smoke_config
 from repro.models import forward_hidden, init_params
 
@@ -55,8 +55,16 @@ def bench_schedules(quick: bool = True, out_path: str | None = None):
             t = timeit(fn, params, toks, warmup=2, iters=5)
             rec[f"{name}_s"] = t
             rec[f"{name}_tok_s"] = L / t
+            # compiled-program memory footprint next to the wall clock
+            # (DESIGN.md §15): temp bytes is what the executor's schedule
+            # actually holds live, the quantity the streaming-carry work
+            # drives flat in n_segments (bench_longctx tracks that curve)
+            mem = compiled_memory_stats(fn, params, toks)
+            for k in ("argument_bytes", "temp_bytes", "peak_bytes"):
+                rec[f"{name}_{k}"] = mem[k]
             row(f"{name}_S{n_seg}", t,
-                f"segments={n_seg} {L / t:.0f} tok/s")
+                f"segments={n_seg} {L / t:.0f} tok/s "
+                f"temp={mem['temp_bytes']} peak={mem['peak_bytes']}")
         rec["vmap_vs_sequential"] = rec["sequential_s"] / rec["diagonal_vmap_s"]
         rec["fused_vs_vmap"] = rec["diagonal_vmap_s"] / rec["diagonal_fused_s"]
         results.append(rec)

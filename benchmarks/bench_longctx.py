@@ -1,0 +1,183 @@
+"""Million-token bounded-memory prefill (DESIGN.md §15, ROADMAP
+"Million-token workloads with bounded memory") -> ``BENCH_longctx.json``.
+
+Three sections:
+
+* ``memory_curve`` — compiled-program byte counts (AOT
+  ``memory_analysis``; nothing runs) of the one-shot diagonal prefill at
+  growing segment counts, streaming carry vs full-ys. The headline is
+  ``temp_flat_ratio_stream``: the streaming executor's temp bytes — the
+  activation memory the schedule actually holds live — must stay flat
+  (<= 1.1x) from the smallest to the largest point (64k -> 1M tokens in
+  the full run). Arguments (the embedded segments) and retained outputs
+  (one row per segment) grow with S by construction — they are the data,
+  not the working set — so the flatness claim is on temp bytes, with the
+  full-ys mode's O(S·B·T·D) output recorded alongside for contrast.
+
+* ``million_token_run`` — the long prefill actually runs on this backend
+  under ``run_diagonal(stream_ys=True)`` (8192 segments x 128 tokens = 1M
+  tokens in the full run; 32k in quick), wall clock and tok/s recorded.
+
+* needle smoke — the run's tokens are a ``needle_qa`` instance; the
+  retained last-segment row feeds ``last_logits`` and the argmax is
+  recorded against the gold answer. The model is untrained (training to
+  retrieval at 8k segments is far beyond smoke scale), so exact-match is
+  chance, and — a *model* numerics property, not an executor one — the
+  untrained ARMT normalizer ``z`` drifts until ``z^T phi(q)`` crosses
+  zero somewhere beyond a few hundred segments, after which reads (and
+  so logits) go non-finite identically under every schedule. The smoke
+  therefore asserts *completion* (bounded-memory prefill over the full
+  length) and records per-element finiteness, while a small-S bitwise
+  check pins the streaming path to the full-width full-ys reference on
+  the same needle data (EXPERIMENTS.md §Long-context).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import compiled_memory_stats, row
+from repro.configs import ARMTConfig, get_smoke_config
+from repro.core import diagonal as diag
+from repro.core.schedule import StackLayout
+from repro.data import needle_qa
+from repro.models import init_params, last_logits
+from repro.models.blocks import make_apply_block
+from repro.models.grouped_blocks import resolve_grouped_apply
+from repro.models.model import embed_segments, init_state
+
+SEG = 128
+
+
+def _config():
+    # bench_diagonal's tiny 8-layer stack at the same segment length, so
+    # the two artifacts' trajectories are comparable
+    cfg = get_smoke_config("llama-1b-armt")
+    return dataclasses.replace(
+        cfg, n_layers=8, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+        d_ff=128, max_position=1 << 21,
+        armt=ARMTConfig(segment_len=SEG, num_mem_tokens=8, d_mem=8))
+
+
+def bench_longctx(quick: bool = True, out_path: str | None = None):
+    cfg = _config()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    layout = StackLayout.from_config(cfg)
+    exec_params = {"prelude": params.get("prelude", ()),
+                   "pattern": params["pattern"]}
+    apply = make_apply_block(cfg, mode="segmented", ssm_method="assoc")
+    ga = resolve_grouped_apply(cfg, "fused", mode="segmented",
+                               ssm_method="assoc")
+    B, M = 1, cfg.armt.num_mem_tokens
+    T = SEG + M
+    dtype = params["embed"].dtype
+    state0 = init_state(cfg, B, "segmented", dtype)
+
+    def runner(stream, **kw):
+        return jax.jit(lambda p, s0, x: diag.run_diagonal(
+            layout, p, s0, x, apply, grouped_apply=ga, stream_ys=stream,
+            retain_pos=SEG - 1, **kw))
+
+    # ---- memory curve: AOT compile only, streaming vs full-ys ----------
+    seg_counts = (64, 128, 256) if quick else (512, 2048, 8192)
+    curve = []
+    for S in seg_counts:
+        x_abs = jax.ShapeDtypeStruct((S, B, T, cfg.d_model), dtype)
+        rec = {"n_segments": S, "seq_len": S * SEG}
+        for name, stream in (("full", False), ("stream", True)):
+            mem = compiled_memory_stats(runner(stream), exec_params,
+                                        state0, x_abs)
+            rec[name] = mem
+            row(f"longctx_mem_{name}_S{S}", 0.0,
+                f"temp={mem['temp_bytes']} out={mem['output_bytes']} "
+                f"arg={mem['argument_bytes']}")
+        curve.append(rec)
+    t0, t1 = curve[0]["stream"]["temp_bytes"], curve[-1]["stream"]["temp_bytes"]
+    flat_ratio = (t1 / t0) if t0 else None
+    row("longctx_temp_flat_ratio", 0.0,
+        f"stream temp {seg_counts[0]}->{seg_counts[-1]} segs: "
+        f"{flat_ratio:.3f}x (acceptance <= 1.1x)")
+
+    # ---- small-S bitwise pin: stream vs full-width full-ys -------------
+    S0 = 16
+    test0 = next(needle_qa(cfg.vocab, B, S0 * SEG, seed=11, n_keys=4))
+    segs0 = embed_segments(params, cfg, jnp.asarray(test0["tokens"]), SEG,
+                           True)
+    ys, st_f = diag.run_diagonal(layout, exec_params, state0, segs0, apply,
+                                 grouped_apply=ga, band_skip=False)
+    sd, st_s = diag.run_diagonal(layout, exec_params, state0, segs0, apply,
+                                 grouped_apply=ga, stream_ys=True,
+                                 retain_pos=SEG - 1)
+    assert (sd["brow"] == ys[:, :, SEG - 1]).all(), \
+        "stream retained rows diverged from full-ys reference"
+    assert all((a == b).all() for a, b in
+               zip(jax.tree_util.tree_leaves(st_s),
+                   jax.tree_util.tree_leaves(st_f)))
+    row("longctx_bitwise_pin", 0.0, f"S={S0} stream==full-ys OK")
+
+    # ---- the long run: streaming prefill + needle smoke ----------------
+    S_run = seg_counts[-1]
+    L_run = S_run * SEG
+    test = next(needle_qa(cfg.vocab, B, L_run, seed=7, n_keys=4,
+                          needle_region=(0.55, 0.95)))
+    toks = jnp.asarray(test["tokens"])
+    segs = embed_segments(params, cfg, toks, SEG, True)
+    run = runner(True)
+    sd, _st = jax.block_until_ready(run(exec_params, state0, segs))  # compile
+    t0 = time.perf_counter()
+    sd, _st = jax.block_until_ready(run(exec_params, state0, segs))
+    wall = time.perf_counter() - t0
+    logits = last_logits(params, cfg, sd["brow"][:, :, None, :])
+    pred = int(jnp.argmax(logits[0]))
+    gold = int(np.asarray(test["answer"])[0])
+    finite = bool(jnp.isfinite(logits).all())
+    finite_frac = float(jnp.isfinite(sd["brow"]).mean())
+    carry_bytes = int(sd["win"].nbytes + sd["brow"].nbytes)
+    million = {
+        "n_segments": S_run, "seq_len": L_run, "wall_s": wall,
+        "tok_s": L_run / wall, "retained_bytes": carry_bytes,
+        "needle": {"pred": pred, "gold": gold,
+                   "exact_match": pred == gold, "logits_finite": finite,
+                   "retained_finite_frac": finite_frac,
+                   "note": "untrained model: accuracy is chance and the "
+                           "ARMT z-normalizer drifts non-finite beyond a "
+                           "few hundred segments under every schedule; "
+                           "the smoke asserts completion, the small-S "
+                           "bitwise pin asserts exactness"},
+    }
+    row("longctx_prefill", wall,
+        f"{L_run} tokens ({S_run} segs) {L_run / wall:.0f} tok/s "
+        f"retained={carry_bytes} B")
+
+    out_path = out_path or os.environ.get("BENCH_LONGCTX_OUT",
+                                          "BENCH_longctx.json")
+    payload = {
+        "bench": "longctx_stream_prefill",
+        "backend": jax.default_backend(),
+        "segment_len": SEG,
+        "model": {"n_layers": cfg.n_layers, "d_model": cfg.d_model,
+                  "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+                  "num_mem_tokens": M},
+        "memory_curve": curve,
+        "temp_flat_ratio_stream": flat_ratio,
+        "million_token_run": million,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    row("bench_longctx_json", 0.0, out_path)
+    return payload
+
+
+def main(quick: bool = True):
+    bench_longctx(quick)
+
+
+if __name__ == "__main__":
+    main(quick=False)

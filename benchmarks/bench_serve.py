@@ -110,6 +110,14 @@ def _drive(eng, reqs, n_slots, chunk, *, groups_per_chunk=4, fused=False,
     # t=0), which is what makes queue_wait_s measure real head-of-line
     # waiting instead of pull latency.
     from repro.serve.scheduler import ContinuousScheduler
+    # compiled-prefill memory columns (DESIGN.md §15) for the workload's
+    # largest admission: AOT memory_analysis of the stepper this record's
+    # admissions actually run. Cached per (engine, signature), so repeated
+    # drives of the same workload pay the extra compile once.
+    n_seg = max(1, max(int(np.asarray(r.prompt).shape[0]) for r in reqs)
+                // eng.seg_len)
+    mem = eng.prefill_memory_stats(
+        n_seg, n_groups=groups_per_chunk if groups_per_chunk > 0 else 4)
     tel = Telemetry(trace=True, registry=MetricsRegistry())
     prev_tel, eng.telemetry = eng.telemetry, tel
     sched = ContinuousScheduler(eng, n_slots=n_slots, chunk=chunk,
@@ -148,6 +156,10 @@ def _drive(eng, reqs, n_slots, chunk, *, groups_per_chunk=4, fused=False,
         "queue_wait_s_mean": float(np.mean(list(qwait.values()))),
         "queue_wait_s_max": float(np.max(list(qwait.values()))),
         "concurrent_admissions_max": int(max(conc.values())),
+        "prefill_n_segments": n_seg,
+        "prefill_argument_bytes": mem["argument_bytes"],
+        "prefill_temp_bytes": mem["temp_bytes"],
+        "prefill_peak_bytes": mem["peak_bytes"],
     }
     if detail:
         rec["per_request"] = {
@@ -356,8 +368,10 @@ def _bench_mixed_workload(cfg, params, quick: bool):
         # scheduling behavior from box hiccups; everything else is median
         best = {"admission_stall_s": min, "wall_s": min,
                 "throughput_tok_s": max}
-        rec[name] = {kk: float(best.get(kk, np.median)(
-            [r[kk] for r in runs[name]])) for kk in runs[name][0]}
+        # memory columns may be None on backends without memory_analysis
+        rec[name] = {kk: (None if runs[name][0][kk] is None else float(
+            best.get(kk, np.median)([r[kk] for r in runs[name]])))
+            for kk in runs[name][0]}
         rec[name]["reps"] = len(runs[name])
         rec[name]["prefill_groups_per_chunk"] = k
         rec[name]["fused_admission"] = fused
@@ -474,8 +488,9 @@ def _bench_burst_admission(cfg, params, quick: bool):
     for name, kw in modes:
         best = {"burst_wait_s": min, "wall_s": min,
                 "throughput_tok_s": max, "steady_tok_s": max}
-        rec[name] = {kk: float(best.get(kk, np.median)(
-            [r[kk] for r in runs[name]])) for kk in runs[name][0]}
+        rec[name] = {kk: (None if runs[name][0][kk] is None else float(
+            best.get(kk, np.median)([r[kk] for r in runs[name]])))
+            for kk in runs[name][0]}
         rec[name]["reps"] = reps
         rec[name].update({k: v for k, v in kw.items()})
 

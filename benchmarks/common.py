@@ -34,6 +34,32 @@ def paired_median(runs: dict, metric: str, num: str, den: str) -> float:
                             for i in range(n)]))
 
 
+def compiled_memory_stats(jit_fn, *args) -> dict:
+    """AOT-compile ``jit_fn`` for ``args`` (arrays or ShapeDtypeStructs) and
+    return ``memory_analysis()`` byte counts as
+    ``{argument,output,temp,peak}_bytes`` — the launch/dryrun.py pattern:
+    every field is getattr-guarded (backends differ in what they report;
+    CPU has argument/output/temp but no peak, so peak falls back to their
+    sum — an upper bound under whole-program liveness). Missing values stay
+    None so JSON artifacts show *that* the backend withheld them rather
+    than fabricating zeros."""
+    compiled = jit_fn.lower(*args).compile()
+    stats = {"argument_bytes": None, "output_bytes": None,
+             "temp_bytes": None, "peak_bytes": None}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:           # backend without memory_analysis support
+        return stats
+    arg = getattr(ma, "argument_size_in_bytes", None)
+    out = getattr(ma, "output_size_in_bytes", None)
+    temp = getattr(ma, "temp_size_in_bytes", None)
+    peak = getattr(ma, "peak_memory_in_bytes", None)
+    if peak is None and None not in (arg, out, temp):
+        peak = arg + out + temp
+    return {"argument_bytes": arg, "output_bytes": out,
+            "temp_bytes": temp, "peak_bytes": peak}
+
+
 def row(name: str, seconds: float, derived: str = "") -> str:
     line = f"{name},{seconds * 1e6:.1f},{derived}"
     print(line, flush=True)

@@ -13,6 +13,9 @@
                                     decisions -> BENCH_kernels.json
   §Serving bench_serve              continuous-batching + prefix-cache +
                                     session workloads -> BENCH_serve.json
+  §Long-context bench_longctx       bounded-memory streaming prefill:
+                                    memory curve + 1M-token run ->
+                                    BENCH_longctx.json
 
 ``QUICK=0 python -m benchmarks.run`` for full sizes.
 ``python -m benchmarks.run --only serve`` (repeatable, comma-ok) runs a
@@ -32,7 +35,8 @@ def main(argv=None) -> None:
                     help="run only these benches (by short name: "
                          "grouped_gemm, attention, inference_scaling, "
                          "error_accumulation, babilong, roofline, diagonal, "
-                         "serve, kernels); repeatable or comma-separated")
+                         "serve, kernels, longctx); repeatable or "
+                         "comma-separated")
     args = ap.parse_args(argv)
 
     quick = os.environ.get("QUICK", "1") != "0"
@@ -45,10 +49,11 @@ def main(argv=None) -> None:
     import benchmarks.bench_diagonal as d
     import benchmarks.bench_serve as sv
     import benchmarks.bench_kernels as kn
+    import benchmarks.bench_longctx as lc
 
     by_name = {"grouped_gemm": g, "attention": a, "inference_scaling": i,
                "error_accumulation": e, "babilong": b, "roofline": r,
-               "diagonal": d, "serve": sv, "kernels": kn}
+               "diagonal": d, "serve": sv, "kernels": kn, "longctx": lc}
     mods = list(by_name.values())
     if args.only:
         names = [n.strip() for part in args.only for n in part.split(",")]

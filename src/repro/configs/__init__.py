@@ -100,6 +100,13 @@ class ArchConfig:
     # 'pallas' force the implementation; 'pallas_interpret' forces the
     # kernel bodies under interpret-mode lowering (CPU validation).
     kernel_backend: str = "auto"  # auto | xla | pallas | pallas_interpret
+    # Blockwise segment cells (DESIGN.md §15): query-block size for the
+    # intra-cell FFN so per-cell activation peaks are O(cell_block·d_ff)
+    # instead of O(T·d_ff) (BPT-style; attention already blocks via
+    # attn_impl='chunked' / the dispatch resolver's causal_blocks). 0 (the
+    # default) keeps the unblocked path — blocked accumulation can differ
+    # in ulps, so the bit-exactness oracles stay on 0.
+    cell_block: int = 0
     source: str = ""           # provenance note
 
     @property
@@ -129,6 +136,7 @@ class ArchConfig:
         assert self.grouped_impl in ("vmap", "fused"), self.grouped_impl
         assert self.kernel_backend in (
             "auto", "xla", "pallas", "pallas_interpret"), self.kernel_backend
+        assert self.cell_block >= 0, self.cell_block
         if any(t.startswith("attn") or t.startswith("dec") or t.startswith("enc")
                for t in self.layer_types):
             assert self.n_heads > 0 and self.n_kv_heads > 0

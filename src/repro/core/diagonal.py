@@ -334,7 +334,8 @@ def _diag_body(layout: StackLayout, params: Dict, apply_block: ApplyBlock,
 def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
                  segments: jax.Array, apply_block: ApplyBlock,
                  *, remat: bool = False, buf_spec=None, grouped_apply=None,
-                 capture_states: bool = False, band_skip=None):
+                 capture_states: bool = False, band_skip=None,
+                 stream_ys: bool = False, retain_pos: int = -1):
     """segments: [S, B, T, D] -> (ys [S, B, T, D], final_state).
 
     Same params/state structure as run_sequential — the two executors are
@@ -367,10 +368,29 @@ def run_diagonal(layout: StackLayout, params: Dict, state0: Dict,
     where the per-step grouped launch pays for every padded slot. The vmap
     path stays on the full-width body (the untouched exactness/autodiff
     oracle); results are equal either way.
+
+    stream_ys: bounded-memory mode (DESIGN.md §15) — never materialize the
+    full ``ys [S, B, T, D]``. Returns ``({"win": [W, B, T, D],
+    "brow": [S, B, D]}, final_state[, captured])`` instead: ``win`` is a
+    rolling window of the last ``W = min(L, S)`` drained segments (drained
+    segment ``s`` lives at ``win[s % W]``; O(L·B·T·D), flat in S) and
+    ``brow`` holds each segment's retained row ``ys[s, :, retain_pos]`` —
+    the only per-segment data the serving consumers need
+    (``boundary_logits`` / ``last_logits`` read exactly one position).
+    Retained outputs are bit-exact vs the full path: the step body is the
+    same closure, and ``win``/``brow`` writes are pure slices of the same
+    emitted tensor. Stream mode always runs the full-width body (no banded
+    phases) and indexes ``segments`` directly with a clamped cursor instead
+    of building the O(S) drain-padded copy.
     """
     S = segments.shape[0]
     L = layout.n_layers
     n_steps = S + L - 1
+    if stream_ys:
+        return _run_diagonal_stream(
+            layout, params, state0, segments, apply_block, remat=remat,
+            buf_spec=buf_spec, grouped_apply=grouped_apply,
+            capture_states=capture_states, retain_pos=retain_pos)
     if band_skip is None:
         band_skip = (grouped_apply is not None and len(layout.pattern) == 1
                      and not layout.prelude and buf_spec is None and L > 1)
@@ -450,12 +470,74 @@ def _run_diagonal_banded(layout: StackLayout, params: Dict, state0: Dict,
     return ys[L - 1:], final_state
 
 
+def _run_diagonal_stream(layout: StackLayout, params: Dict, state0: Dict,
+                         segments: jax.Array, apply_block: ApplyBlock, *,
+                         remat: bool, buf_spec, grouped_apply,
+                         capture_states: bool, retain_pos: int):
+    """``run_diagonal(stream_ys=True)``: one full-width scan whose carry
+    holds the O(L·B·T·D) rolling window instead of emitting full drained
+    segments, and whose per-step emission is the [B, D] retained row — so
+    the scan's stacked output is O(S·B·D), not O(S·B·T·D). The input is
+    indexed with a clamped cursor (no drain-padded O(S) copy; the inserted
+    value at overshoot steps is discarded by the validity select, exactly
+    as in ``pipeline_step``)."""
+    S = segments.shape[0]
+    L = layout.n_layers
+    n_steps = S + L - 1
+    W = min(L, S)
+    body = _diag_body(layout, params, apply_block, S, buf_spec=buf_spec,
+                      grouped_apply=grouped_apply,
+                      capture_states=capture_states)
+    step_fn = jax.checkpoint(body) if remat else body
+
+    _constrain = _constrain_fn(buf_spec)
+    _constrain_states = _constrain_states_fn(buf_spec)
+    buf0 = _constrain(jnp.zeros((L,) + segments.shape[1:], segments.dtype))
+    state0 = dict(state0,
+                  pattern=_constrain_states(tuple(state0["pattern"])))
+    win0 = jnp.zeros((W,) + segments.shape[1:], segments.dtype)
+    rows0 = jnp.zeros((S,) + segments.shape[1:2] + segments.shape[3:],
+                      segments.dtype)
+
+    def step(carry, i):
+        buf, states, win, rows = carry
+        seg_in = jax.lax.dynamic_index_in_dim(
+            segments, jnp.minimum(i, S - 1), 0, keepdims=False)
+        (buf, states), emit = step_fn((buf, states), (seg_in, i))
+        out, cap_e = emit if capture_states else (emit, None)
+        # segment i-(L-1) drained this step: rotate it into the window and
+        # keep its retained row (fill steps write nothing — idx < 0). Both
+        # land in the *carry* (guarded in-place updates, clamped index)
+        # rather than a scan emission: an emitted stream would stack
+        # [S+L-1] rows into a fresh buffer that only exists to be sliced —
+        # an O(S·B·D) temp the carry-resident buffer avoids (the flatness
+        # curve in BENCH_longctx.json is measured on this program).
+        idx = i - (L - 1)
+        ok = idx >= 0                      # idx < S always (i <= S+L-2)
+        ci = jnp.maximum(idx, 0)
+        wi = jax.lax.rem(ci, jnp.int32(W))
+        cur = jax.lax.dynamic_index_in_dim(win, wi, 0, keepdims=False)
+        win = jax.lax.dynamic_update_index_in_dim(
+            win, jnp.where(ok, out.astype(win.dtype), cur), wi, 0)
+        row = out[:, retain_pos]
+        cur_row = jax.lax.dynamic_index_in_dim(rows, ci, 0, keepdims=False)
+        rows = jax.lax.dynamic_update_index_in_dim(
+            rows, jnp.where(ok, row.astype(rows.dtype), cur_row), ci, 0)
+        return (buf, states, win, rows), cap_e
+
+    (_, final_state, win, rows), captured = jax.lax.scan(
+        step, (buf0, state0, win0, rows0), jnp.arange(n_steps))
+    if capture_states:
+        return {"win": win, "brow": rows}, final_state, captured
+    return {"win": win, "brow": rows}, final_state
+
+
 # ---------------------------------------------------------------------------
 # Resumable pipeline (interleaved chunked prefill, DESIGN.md §11)
 # ---------------------------------------------------------------------------
 
 def pipeline_init(layout: StackLayout, state0: Dict, segments: jax.Array,
-                  *, capture_states: bool = False):
+                  *, capture_states: bool = False, stream_ys: bool = False):
     """Build ``(xs, carry)`` for a resumable diagonal prefill over
     ``segments [S, B, T, D]``.
 
@@ -471,6 +553,18 @@ def pipeline_init(layout: StackLayout, state0: Dict, segments: jax.Array,
         capture, leading axis [S+L-1], same layout the one-shot executor
         emits (so ``boundary_states_from_capture`` applies unchanged).
 
+    ``stream_ys`` (DESIGN.md §15) replaces the O(S·B·T·D) ``ys`` buffer
+    with the bounded-memory pair
+
+      * ``win``  [min(L, S), B, T, D] — rolling window of the most recent
+        drained segments (segment ``s`` at ``win[s % W]``);
+      * ``brow`` [S, B, D] — each drained segment's retained row at the
+        ``retain_pos`` the stepper is called with (the segment-boundary
+        position ``boundary_logits``/``last_logits`` read),
+
+    so the per-admission activation footprint is flat in S. The cell math
+    is the shared step body either way — retained outputs are bit-exact.
+
     ``xs`` is the drain-padded segment input [S+L-1, B, T, D]; it is
     read-only, passed alongside the carry on every ``pipeline_step`` call
     and never donated.
@@ -483,8 +577,14 @@ def pipeline_init(layout: StackLayout, state0: Dict, segments: jax.Array,
         "buf": jnp.zeros((L,) + segments.shape[1:], segments.dtype),
         "state": state0,
         "step": jnp.zeros((), jnp.int32),
-        "ys": jnp.zeros_like(segments),
     }
+    if stream_ys:
+        W = min(L, S)
+        B, D = segments.shape[1], segments.shape[3]
+        carry["win"] = jnp.zeros((W,) + segments.shape[1:], segments.dtype)
+        carry["brow"] = jnp.zeros((S, B, D), segments.dtype)
+    else:
+        carry["ys"] = jnp.zeros_like(segments)
     if capture_states:
         n_steps = S + L - 1
         carry["cap"] = jax.tree_util.tree_map(
@@ -495,7 +595,8 @@ def pipeline_init(layout: StackLayout, state0: Dict, segments: jax.Array,
 
 def pipeline_step(layout: StackLayout, params: Dict, xs: jax.Array,
                   carry: Dict, apply_block: ApplyBlock, *, n_groups: int = 1,
-                  buf_spec=None, grouped_apply=None) -> Dict:
+                  buf_spec=None, grouped_apply=None, remat: bool = False,
+                  retain_pos: int = -1) -> Dict:
     """Advance a suspended pipeline by ``n_groups`` anti-diagonal groups.
 
     Pure ``(params, xs, carry) -> carry`` — jit (and donate the carry) at
@@ -506,13 +607,26 @@ def pipeline_step(layout: StackLayout, params: Dict, xs: jax.Array,
     ``ys``/``cap`` slot is written, so overshooting the final group (the
     last fixed-size call of a grid whose S+L-1 is not a multiple of
     n_groups) is safe — compile count stays one program per (S, n_groups).
+
+    ``remat`` wraps the shared step body in ``jax.checkpoint`` — the same
+    rematerialization ``run_diagonal(remat=True)`` applies, so the serve
+    stepper honors ``cfg.remat`` like the blocking path (checkpoint does
+    not change forward values; the two drivers stay bit-identical).
+
+    Streaming carries (``pipeline_init(stream_ys=True)``) are detected by
+    structure: the drained segment rotates into ``carry['win']`` and its
+    ``retain_pos`` row lands in ``carry['brow']`` instead of a full ``ys``
+    write (DESIGN.md §15).
     """
-    S = carry["ys"].shape[0]
+    stream = "win" in carry
+    S = carry["brow"].shape[0] if stream else carry["ys"].shape[0]
     L = layout.n_layers
     n_steps = S + L - 1
     capture = "cap" in carry
     body = _diag_body(layout, params, apply_block, S, buf_spec=buf_spec,
                       grouped_apply=grouped_apply, capture_states=capture)
+    if remat:
+        body = jax.checkpoint(body)
     _constrain_states = _constrain_states_fn(buf_spec)
     carry = dict(carry, state=dict(
         carry["state"],
@@ -524,15 +638,33 @@ def pipeline_step(layout: StackLayout, params: Dict, xs: jax.Array,
             xs, jnp.minimum(i, xs.shape[0] - 1), 0, keepdims=False)
         (buf, states), emit = body((c["buf"], c["state"]), (seg_in, i))
         out, cap_e = emit if capture else (emit, None)
-        # segment i-(L-1) drained this group: write it into ys (guarded —
-        # fill steps and overshoot steps write nothing)
+        # segment i-(L-1) drained this group: write it into ys — or, in
+        # stream mode, rotate it into the window and keep its retained row
+        # (guarded — fill steps and overshoot steps write nothing)
         idx = i - (L - 1)
         ok = (idx >= 0) & (idx < S)
         ci = jnp.clip(idx, 0, S - 1)
-        cur = jax.lax.dynamic_index_in_dim(c["ys"], ci, 0, keepdims=False)
-        ys = jax.lax.dynamic_update_index_in_dim(
-            c["ys"], jnp.where(ok, out.astype(c["ys"].dtype), cur), ci, 0)
-        new = dict(c, buf=buf, state=states, step=i + 1, ys=ys)
+        if stream:
+            W = c["win"].shape[0]
+            wi = jax.lax.rem(ci, jnp.int32(W))
+            curw = jax.lax.dynamic_index_in_dim(c["win"], wi, 0,
+                                                keepdims=False)
+            win = jax.lax.dynamic_update_index_in_dim(
+                c["win"], jnp.where(ok, out.astype(c["win"].dtype), curw),
+                wi, 0)
+            row = out[:, retain_pos]
+            curb = jax.lax.dynamic_index_in_dim(c["brow"], ci, 0,
+                                                keepdims=False)
+            brow = jax.lax.dynamic_update_index_in_dim(
+                c["brow"], jnp.where(ok, row.astype(c["brow"].dtype), curb),
+                ci, 0)
+            new = dict(c, buf=buf, state=states, step=i + 1, win=win,
+                       brow=brow)
+        else:
+            cur = jax.lax.dynamic_index_in_dim(c["ys"], ci, 0, keepdims=False)
+            ys = jax.lax.dynamic_update_index_in_dim(
+                c["ys"], jnp.where(ok, out.astype(c["ys"].dtype), cur), ci, 0)
+            new = dict(c, buf=buf, state=states, step=i + 1, ys=ys)
         if capture:
             si = jnp.minimum(i, n_steps - 1)
             sok = i < n_steps
@@ -552,7 +684,8 @@ def pipeline_step(layout: StackLayout, params: Dict, xs: jax.Array,
 def pipeline_step_pool(layout: StackLayout, params: Dict, xs_pool: jax.Array,
                        carry_pool: Dict, apply_block: ApplyBlock, *,
                        n_groups: int = 1, grouped_apply=None,
-                       pool_spec=None) -> Dict:
+                       pool_spec=None, remat: bool = False,
+                       retain_pos: int = -1) -> Dict:
     """Advance a *pool* of suspended pipelines by ``n_groups`` groups each
     (pooled concurrent admissions, DESIGN.md §12).
 
@@ -585,7 +718,8 @@ def pipeline_step_pool(layout: StackLayout, params: Dict, xs_pool: jax.Array,
     def step_one(xs, carry):
         return pipeline_step(layout, params, xs, carry, apply_block,
                              n_groups=n_groups, buf_spec=None,
-                             grouped_apply=grouped_apply)
+                             grouped_apply=grouped_apply, remat=remat,
+                             retain_pos=retain_pos)
 
     return constrain(jax.vmap(step_one)(xs_pool, constrain(carry_pool)))
 
@@ -608,9 +742,16 @@ def pipeline_finalize(layout: StackLayout, carry: Dict):
     returns ``(ys [S, B, T, D], final_state, captured)`` — the same triple
     (captured None unless the carry was built with capture_states) the
     one-shot ``run_diagonal`` produces, with ``captured`` already
-    re-gathered into per-boundary snapshots."""
-    S = carry["ys"].shape[0]
+    re-gathered into per-boundary snapshots. A streaming carry
+    (``pipeline_init(stream_ys=True)``) finalizes to
+    ``({"win": ..., "brow": ...}, final_state, captured)`` — the same pair
+    ``run_diagonal(stream_ys=True)`` returns."""
+    stream = "win" in carry
+    S = carry["brow"].shape[0] if stream else carry["ys"].shape[0]
     captured = None
     if "cap" in carry:
         captured = boundary_states_from_capture(layout, carry["cap"], S)
+    if stream:
+        return {"win": carry["win"], "brow": carry["brow"]}, \
+            carry["state"], captured
     return carry["ys"], carry["state"], captured

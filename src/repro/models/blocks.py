@@ -89,12 +89,34 @@ def make_apply_block(cfg, *, mode: str = "segmented", ssm_method: str = "scan"):
     """
     armt_on = cfg.armt is not None and mode == "segmented"
     M = cfg.armt.num_mem_tokens if armt_on else 0
+    cb = getattr(cfg, "cell_block", 0)
+
+    def blockwise_ffn(h, p):
+        # BPT-style query-blocked FFN (DESIGN.md §15): the FFN is
+        # position-local, so splitting the token axis into cell_block
+        # chunks and rematerializing per chunk bounds the live
+        # intermediate to O(cell_block * d_ff) instead of O(T * d_ff).
+        # lax.map keeps the chunks sequential (one block's activations
+        # alive at a time); the pad tail is dropped after the reshape.
+        T = h.shape[-2]
+        nb = -(-T // cb)
+        hp = jnp.pad(h, [(0, 0)] * (h.ndim - 2)
+                     + [(0, nb * cb - T), (0, 0)])
+        hb = jnp.moveaxis(
+            hp.reshape(hp.shape[:-2] + (nb, cb, hp.shape[-1])), -3, 0)
+        f = jax.checkpoint(
+            lambda blk: ffn(cfg.act, norm(cfg.norm, blk, p["ln2"]),
+                            p["ffn"]))
+        yb = jnp.moveaxis(jax.lax.map(f, hb), 0, -3)
+        return yb.reshape(hp.shape)[..., :T, :]
 
     def apply_ffn(t: str, h, p):
         if t.endswith("moe"):
             return h + moe_ffn(norm(cfg.norm, h, p["ln2"]), p["moe"],
                                cfg.moe, cfg.act)
         if "ffn" in p:
+            if cb > 0 and h.shape[-2] > cb:
+                return h + blockwise_ffn(h, p)
             return h + ffn(cfg.act, norm(cfg.norm, h, p["ln2"]), p["ffn"])
         return h
 

@@ -30,6 +30,7 @@ path must match it to fp32 tolerance (tests/test_grouped_blocks.py).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ops as kops
 from repro.models.attention import rope_qk
@@ -40,14 +41,20 @@ from repro.models.layers import norm, rmsnorm
 def resolve_grouped_apply(cfg, impl=None, *, mode: str = "segmented",
                           ssm_method: str = "assoc",
                           use_kernel: bool | None = None,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None,
+                          remat: bool = False):
     """Resolve the ``grouped_impl`` knob (explicit override, else
     cfg.grouped_impl) to the executor's grouped application: ``None`` for
     'vmap' (the executor falls back to ``jax.vmap(apply_block)``), a
     ``make_grouped_apply`` closure for 'fused'. Shared by
     ``models.model.forward_hidden`` and the serving prefill pipeline
     (``serve/engine.py``), so the blocking and resumable prefill paths
-    select the exact same grouped launch."""
+    select the exact same grouped launch.
+
+    ``remat`` (cfg.remat mapped by the caller) wraps the fused cell in
+    ``jax.checkpoint`` so the grouped path recomputes intra-cell
+    activations on the backward pass like the vmap path does — forward
+    values are unchanged (tests/test_remat_paths.py)."""
     impl = impl or cfg.grouped_impl
     if impl not in ("vmap", "fused"):
         raise ValueError(f"unknown grouped_impl {impl!r} "
@@ -55,13 +62,15 @@ def resolve_grouped_apply(cfg, impl=None, *, mode: str = "segmented",
     if impl == "vmap":
         return None
     return make_grouped_apply(cfg, mode=mode, ssm_method=ssm_method,
-                              use_kernel=use_kernel, interpret=interpret)
+                              use_kernel=use_kernel, interpret=interpret,
+                              remat=remat)
 
 
 def make_grouped_apply(cfg, *, mode: str = "segmented",
                        ssm_method: str = "scan",
                        use_kernel: bool | None = None,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       remat: bool = False):
     """Returns grouped_apply(btype, stacked_params, x, stacked_state).
 
     Drop-in replacement for ``jax.vmap(apply_block)`` over one pattern
@@ -102,6 +111,32 @@ def make_grouped_apply(cfg, *, mode: str = "segmented",
         # per-layer norm weights [G, D] broadcast against h [G, B, T, D];
         # reuses the fp32 norm math from models/layers.py unchanged
         return norm(cfg.norm, h, {k: v[:, None, None, :] for k, v in p.items()})
+
+    cb = getattr(cfg, "cell_block", 0)
+
+    def blockwise_ffn(h, p):
+        # BPT-style query-blocked FFN on the grouped layout (DESIGN.md
+        # §15): chunk the token axis of [G, B, T, D], run the full grouped
+        # FFN (norm -> up/gate -> down) per chunk under jax.checkpoint, so
+        # only one O(G * B * cell_block * d_ff) intermediate is live at a
+        # time; lax.map keeps the chunks sequential. The pad tail is
+        # dropped after the reshape.
+        G, B, T, D = h.shape
+        nb = -(-T // cb)
+        hp = jnp.pad(h, ((0, 0), (0, 0), (0, nb * cb - T), (0, 0)))
+        hb = jnp.moveaxis(hp.reshape(G, B, nb, cb, D), 2, 0)
+
+        def one_block(blk):
+            h2 = snorm(blk, p["ln2"])
+            pf = p["ffn"]
+            if cfg.act == "silu":
+                return gg(gg(h2, pf["wg"], act="silu") * gg(h2, pf["wu"]),
+                          pf["wd"])
+            mid = gg(h2, pf["wi"], pf.get("bi"), act="gelu")
+            return gg(mid, pf["wo"], pf.get("bo"))
+
+        yb = jax.lax.map(jax.checkpoint(one_block), hb)
+        return jnp.moveaxis(yb, 0, 2).reshape(G, B, nb * cb, D)[:, :, :T]
 
     def fused_attn(p, x, state):
         G, B, T, D = x.shape
@@ -144,9 +179,15 @@ def make_grouped_apply(cfg, *, mode: str = "segmented",
         # grouped_gemm_armt_update launch replaces down-proj + update (the
         # two separate per-anti-diagonal-cell launches). B > 1 interleaves
         # batch rows, so the fused epilogue cannot see per-batch tails —
-        # fall back to the two-launch path there.
-        fuse_update = armt_on and M > 0 and B == 1 and "ffn" in p
-        if "ffn" in p:
+        # fall back to the two-launch path there. The blockwise-FFN path
+        # (cell_block) computes the FFN in token chunks, so the epilogue
+        # never sees the whole tail either — also two-launch.
+        blockwise = cb > 0 and T > cb and "ffn" in p
+        fuse_update = armt_on and M > 0 and B == 1 and "ffn" in p \
+            and not blockwise
+        if blockwise:
+            y = h + blockwise_ffn(h, p)
+        elif "ffn" in p:
             h2 = snorm(h, p["ln2"])
             pf = p["ffn"]
             if cfg.act == "silu":       # swiglu: silu epilogue on the gate
@@ -175,9 +216,16 @@ def make_grouped_apply(cfg, *, mode: str = "segmented",
             new_state["z"] = z2.reshape(state["z"].shape)
         return y, new_state
 
+    # cfg.remat threading for the fused cell: checkpoint the whole grouped
+    # cell so the backward pass recomputes intra-cell activations instead
+    # of holding them — forward values are unchanged (the vmap path gets
+    # the same guarantee from the executor-level checkpoint in
+    # run_diagonal / pipeline_step)
+    cell = jax.checkpoint(fused_attn) if remat else fused_attn
+
     def grouped_apply(t, p, x, state):
         if t == "attn":
-            return fused_attn(p, x, state)
+            return cell(p, x, state)
         return fallback(t, p, x, state)
 
     return grouped_apply

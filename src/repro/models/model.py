@@ -255,7 +255,8 @@ def forward_hidden(params: Dict, cfg: ArchConfig, tokens: jax.Array, *,
         kw["buf_spec"] = slot_spec
         from repro.models.grouped_blocks import resolve_grouped_apply
         ga = resolve_grouped_apply(cfg, grouped_impl, mode=block_mode,
-                                   ssm_method=ssm_method)
+                                   ssm_method=ssm_method,
+                                   remat=cfg.remat != "none")
         if ga is not None:
             kw["grouped_apply"] = ga
     else:

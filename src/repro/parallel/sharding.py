@@ -375,9 +375,18 @@ def pipeline_carry_specs(carry_shape: Any, mesh: Mesh, n_layers: int,
         pattern leaves over ``stacked_axis``);
       * ``ys`` / ``xs`` [S(+L-1), B, T, D] — batch over the DP axes,
         segment/step dims replicated (every step reads one segment);
+      * ``win`` [W, B, T, D] (streaming carries, DESIGN.md §15) — the
+        rolling drained-segment window, laid out exactly like ``ys``
+        (window dim replicated, batch over the DP axes);
+      * ``brow`` [S, B, D] (streaming carries) — retained boundary rows,
+        batch over the DP axes;
       * ``cap`` — per-group capture [S+L-1, (n_super,) B, ...]: batch with
         the DP axes, stacked dim over ``stacked_axis`` when divisible;
       * ``step`` — replicated scalar cursor.
+
+    Only the keys present in ``carry_shape`` (plus ``xs``) are returned,
+    so the spec tree always matches the carry structure — full and
+    streaming carries alike.
 
     The engine commits the freshly built carry to these specs once at
     pipeline start; every subsequent ``prefill_step`` output inherits the
@@ -391,9 +400,14 @@ def pipeline_carry_specs(carry_shape: Any, mesh: Mesh, n_layers: int,
         "state": decode_state_specs(carry_shape["state"], mesh, batch,
                                     stacked_axis=stacked_axis),
         "step": NamedSharding(mesh, P()),
-        "ys": seg_spec,
         "xs": seg_spec,
     }
+    if "ys" in carry_shape:
+        out["ys"] = seg_spec
+    if "win" in carry_shape:
+        out["win"] = seg_spec
+    if "brow" in carry_shape:
+        out["brow"] = NamedSharding(mesh, P(None, bax, None))
     if "cap" in carry_shape:
         def one(path, leaf):
             names = _path_names(path)

@@ -217,6 +217,8 @@ class ServeEngine:
         #                              ('pool', chunk, bucket-signatures))
         self._pool_steps: Dict = {}  # (S, B, capture, k, n_pool) -> jitted
         #                              pooled stepper (admission pool §12)
+        self._mem_stats: Dict = {}   # (S, B, capture, stream, k) -> compiled
+        #                              prefill memory_analysis (§15 budget)
         # observability (DESIGN.md §13): metrics into the process default
         # registry unless told otherwise; spans only when a recorder was
         # asked for. Host-side only — never adds a device sync.
@@ -463,7 +465,8 @@ class ServeEngine:
         apply = make_apply_block(self.cfg, mode="segmented",
                                  ssm_method="assoc")
         gapply = resolve_grouped_apply(self.cfg, self.grouped_impl,
-                                       mode="segmented", ssm_method="assoc")
+                                       mode="segmented", ssm_method="assoc",
+                                       remat=self.cfg.remat != "none")
         return apply, gapply
 
     def prefill_step(self, n_segments: int, batch: int, capture: bool,
@@ -496,7 +499,9 @@ class ServeEngine:
                 return diag.pipeline_step(layout, exec_params, xs, carry,
                                           apply, n_groups=n_groups,
                                           buf_spec=buf_spec,
-                                          grouped_apply=gapply)
+                                          grouped_apply=gapply,
+                                          remat=self.cfg.remat != "none",
+                                          retain_pos=self.seg_len - 1)
 
         donate = (2,) if jax.default_backend() != "cpu" else ()
         self._pipe_steps[key] = jax.jit(step, donate_argnums=donate)
@@ -535,7 +540,9 @@ class ServeEngine:
                 carry_pool = diag.pipeline_step_pool(
                     layout, exec_params, xs_pool, carry_pool, apply,
                     n_groups=n_groups, grouped_apply=gapply,
-                    pool_spec=pool_spec)
+                    pool_spec=pool_spec,
+                    remat=self.cfg.remat != "none",
+                    retain_pos=self.seg_len - 1)
                 return tuple(
                     jax.tree_util.tree_map(lambda a, _i=i: a[_i], carry_pool)
                     for i in range(n_pool))
@@ -592,19 +599,123 @@ class ServeEngine:
             out = step(self.params, xs_t, carry_t)
         return list(out[:len(group)])
 
+    # ------------------------------------------------------------------
+    # Admission memory accounting (DESIGN.md §15)
+    # ------------------------------------------------------------------
+
+    def prefill_activation_bytes(self, n_segments: int, batch: int = 1, *,
+                                 stream: bool = True) -> int:
+        """Host-side analytic estimate of the device buffers one diagonal
+        admission of ``n_segments`` segments holds while suspended: the
+        read-only drain-padded ``xs [S+L-1]``, the slot buffer ``[L]``, and
+        the output carry — the rolling ``win [min(L,S)]`` + ``brow`` pair
+        in stream mode, the full ``ys [S]`` otherwise (all in units of one
+        ``[B, T, D]`` segment). Pure arithmetic (no compile, no sync): the
+        scheduler's byte-budget admission check runs this per request. The
+        compiled-program ground truth is ``prefill_memory_stats``."""
+        cfg = self.cfg
+        M = cfg.armt.num_mem_tokens if cfg.armt is not None else 0
+        T = self.seg_len + M
+        item = jnp.dtype(self.params["embed"].dtype).itemsize
+        seg = batch * T * cfg.d_model * item
+        L = self._n_layers
+        S = n_segments
+        total = (S + L - 1) * seg + L * seg                  # xs + buf
+        if stream:
+            total += min(L, S) * seg + S * batch * cfg.d_model * item
+        else:
+            total += S * seg                                 # full ys
+        return total
+
+    def prefill_memory_stats(self, n_segments: int, batch: int = 1, *,
+                             capture: bool = False, stream: bool = False,
+                             n_groups: int = 4) -> Dict:
+        """AOT-compile the resumable prefill stepper for this signature
+        (abstract inputs — nothing runs) and return its
+        ``compiled.memory_analysis()`` byte counts:
+        ``{argument,output,temp,peak}_bytes`` (peak falls back to
+        argument+output+temp where the backend reports no peak — the
+        launch/dryrun.py pattern). Cached per signature; publishes
+        ``memory.temp_bytes`` / ``memory.peak_bytes`` gauges to the
+        engine's metrics registry so the serve stack's memory trajectory
+        is scraped like any other metric (DESIGN.md §15)."""
+        key = (n_segments, batch, capture, stream, n_groups)
+        if key in self._mem_stats:
+            return self._mem_stats[key]
+        cfg = self.cfg
+        layout = StackLayout.from_config(cfg)
+        dtype = self.params["embed"].dtype
+        M = cfg.armt.num_mem_tokens if cfg.armt is not None else 0
+        T = self.seg_len + M
+        state0 = init_state(cfg, batch, "segmented", dtype)
+        x_abs = jax.ShapeDtypeStruct((n_segments, batch, T, cfg.d_model),
+                                     dtype)
+        xs_abs, carry_abs = jax.eval_shape(
+            lambda x: diag.pipeline_init(layout, state0, x,
+                                         capture_states=capture,
+                                         stream_ys=stream), x_abs)
+        step = self.prefill_step(n_segments, batch, capture, n_groups)
+        with self._mesh_ctx():
+            compiled = step.lower(self.params, xs_abs, carry_abs).compile()
+        stats = {"argument_bytes": None, "output_bytes": None,
+                 "temp_bytes": None, "peak_bytes": None}
+        try:
+            ma = compiled.memory_analysis()
+            arg = getattr(ma, "argument_size_in_bytes", None)
+            out = getattr(ma, "output_size_in_bytes", None)
+            temp = getattr(ma, "temp_size_in_bytes", None)
+            peak = getattr(ma, "peak_memory_in_bytes", None)
+            if peak is None and None not in (arg, out, temp):
+                peak = arg + out + temp
+            stats = {"argument_bytes": arg, "output_bytes": out,
+                     "temp_bytes": temp, "peak_bytes": peak}
+        except Exception:       # backend without memory_analysis support
+            pass
+        reg = self.telemetry.registry
+        if reg is not None:
+            labels = dict(n_segments=str(n_segments),
+                          stream="on" if stream else "off")
+            if stats["temp_bytes"] is not None:
+                reg.set_gauge("memory.temp_bytes", stats["temp_bytes"],
+                              **labels)
+            if stats["peak_bytes"] is not None:
+                reg.set_gauge("memory.peak_bytes", stats["peak_bytes"],
+                              **labels)
+        self._mem_stats[key] = stats
+        return stats
+
     def start_prefill(self, prompts: jax.Array, *,
                       groups_per_call: Optional[int] = 4,
-                      session_entry=None) -> "PrefillPipeline":
+                      session_entry=None,
+                      stream: bool = False,
+                      max_stage_segments: Optional[int] = None
+                      ) -> "PrefillPipeline":
         """Begin a *resumable* admission (DESIGN.md §11): returns a
         PrefillPipeline equivalent to ``_prefill(prompts)`` (or, with
         ``session_entry``, to the session-resume chunk feed) whose
         ``advance()`` runs one bounded unit of work — ``groups_per_call``
         anti-diagonal groups of the active diagonal stage, or one tail
         chunk piece — so a scheduler can interleave decode chunks between
-        calls instead of blocking on the whole prefill."""
+        calls instead of blocking on the whole prefill.
+
+        ``stream``: bounded-memory admission (DESIGN.md §15) — the diagonal
+        stages carry the rolling ``win``/``brow`` pair instead of the full
+        ``ys [S, B, T, D]``, so the per-admission activation footprint is
+        flat in prompt length. Identical results (last-position logits,
+        boundary states, final recurrent state) — the prefix-cache hidden
+        states come from the same capture buffers either way.
+
+        ``max_stage_segments``: cap each diagonal stage at this many
+        segments — oversized prompts then chunk through multiple resumable
+        stages (the recurrent state chains across stages exactly like the
+        blocking path's pow2 groups), bounding even the read-only ``xs``
+        buffer per stage. The scheduler's byte-budget admission sets both
+        knobs together (overflow-aware admission, DESIGN.md §15)."""
         return PrefillPipeline(self, prompts,
                                groups_per_call=groups_per_call,
-                               session_entry=session_entry)
+                               session_entry=session_entry,
+                               stream=stream,
+                               max_stage_segments=max_stage_segments)
 
     # ------------------------------------------------------------------
     # On-device decode loop
@@ -761,7 +872,8 @@ class ServeEngine:
               prefill_groups_per_chunk: int = 4,
               fused_admission: bool = False,
               max_concurrent_admissions: Optional[int] = None,
-              admission_fairness: str = "round_robin") -> Iterator:
+              admission_fairness: str = "round_robin",
+              admission_byte_budget: Optional[int] = None) -> Iterator:
         """Continuous-batching streaming front door: admit `Request`s into a
         fixed pool of decode slots and yield `StreamEvent`s as tokens are
         produced. Rejections (queue-full, invalid request, evicted session)
@@ -781,14 +893,21 @@ class ServeEngine:
         free slots, 1 restores the PR 5 single-admission behavior.
         admission_fairness: 'round_robin' (default — every in-flight
         admission advances k groups per round, same-signature carries
-        pooled into one launch) or 'oldest_first' (head-of-line)."""
+        pooled into one launch) or 'oldest_first' (head-of-line).
+
+        admission_byte_budget: overflow-aware admission (DESIGN.md §15) —
+        prompts whose full-``ys`` prefill would hold more than this many
+        activation bytes are admitted through the streaming carry with
+        byte-bounded stages instead of being rejected or ballooning
+        memory; None (default) disables the check."""
         from repro.serve.scheduler import ContinuousScheduler
         sched = ContinuousScheduler(
             self, n_slots=n_slots, chunk=chunk, max_queue=max_queue,
             prefill_groups_per_chunk=prefill_groups_per_chunk,
             fused_admission=fused_admission,
             max_concurrent_admissions=max_concurrent_admissions,
-            admission_fairness=admission_fairness)
+            admission_fairness=admission_fairness,
+            admission_byte_budget=admission_byte_budget)
         return sched.run(requests)
 
 
@@ -852,8 +971,15 @@ class PrefillPipeline:
     """
 
     def __init__(self, engine: ServeEngine, prompts, *,
-                 groups_per_call: Optional[int] = 4, session_entry=None):
+                 groups_per_call: Optional[int] = 4, session_entry=None,
+                 stream: bool = False,
+                 max_stage_segments: Optional[int] = None):
         self.engine = engine
+        self._stream = bool(stream)
+        if max_stage_segments is not None and max_stage_segments < 1:
+            raise ValueError(
+                f"max_stage_segments must be >= 1, got {max_stage_segments}")
+        self._max_stage = max_stage_segments
         # None: each advance() runs its whole diagonal stage in one jitted
         # call (blocking semantics through the resumable machinery — the
         # fair baseline the bench compares against, free of the legacy
@@ -936,8 +1062,17 @@ class PrefillPipeline:
                     self._dstate = _transplant(self._exec_state, self._dstate)
         self._use_cache = use_cache
         rem = n_full - self.cached
-        groups = (_pow2_chunks(rem) if engine.bucket_prompts
-                  else ([rem] if rem else []))
+        if self._max_stage is not None and rem > self._max_stage:
+            # byte-budget chunking (DESIGN.md §15): as many largest-pow2-
+            # under-cap stages as fit, then the pow2 decomposition of the
+            # remainder — every stage size stays a power of two (bounded
+            # compile count) and <= the cap (bounded xs/carry bytes); the
+            # recurrent state chains across stages like any staged prefill
+            cap = 1 << (self._max_stage.bit_length() - 1)
+            groups = [cap] * (rem // cap) + _pow2_chunks(rem % cap)
+        else:
+            groups = (_pow2_chunks(rem) if engine.bucket_prompts
+                      else ([rem] if rem else []))
         off = self.cached
         for g in groups:
             if engine.schedule != "diagonal":
@@ -983,7 +1118,8 @@ class PrefillPipeline:
             state0 = init_state(cfg, self.B, "segmented",
                                 eng.params["embed"].dtype)
         xs, carry = diag.pipeline_init(layout, state0, x,
-                                       capture_states=self._use_cache)
+                                       capture_states=self._use_cache,
+                                       stream_ys=self._stream)
         if eng.mesh is not None:
             specs = shd.pipeline_carry_specs(
                 carry, eng.mesh, layout.n_layers, self.B,
@@ -1001,7 +1137,17 @@ class PrefillPipeline:
         layout = StackLayout.from_config(cfg)
         ys, fin, capd = diag.pipeline_finalize(layout, self._carry)
         with_mem = cfg.armt is not None and cfg.armt.num_mem_tokens > 0
-        hidden = ys[:, :, :eng.seg_len] if with_mem else ys
+        if self._stream:
+            # Streaming carry (DESIGN.md §15): `brow [S, B, D]` holds
+            # exactly the retained row the consumers below read —
+            # boundary_logits and last_logits both slice position
+            # ``[:, :, -1]`` of the seg_len-trimmed hidden, which is the
+            # ``retain_pos = seg_len - 1`` row the stepper kept. Lifting
+            # brow to [S, B, 1, D] makes both functions read it unchanged,
+            # so the logits math is the same host code on the same values.
+            hidden = ys["brow"][:, :, None, :]
+        else:
+            hidden = ys[:, :, :eng.seg_len] if with_mem else ys
         if self._use_cache:
             blogits = boundary_logits(eng.params, cfg, hidden)
             for c in range(g):
@@ -1146,16 +1292,18 @@ class AdmissionPool:
 
     def diag_buckets(self):
         """Group members whose next unit is a diagonal stage by pooled-
-        launch signature: ``{(n_segments, capture, k): [(pipe, xs, carry),
-        ...]}`` in member (FIFO) order. Members at a tail piece (or done)
-        are absent — they advance individually."""
+        launch signature: ``{(n_segments, capture, stream, k): [(pipe, xs,
+        carry), ...]}`` in member (FIFO) order. ``stream`` keeps
+        bounded-memory (win/brow) carries out of full-``ys`` pools — the
+        carry structures differ, so they cannot stack. Members at a tail
+        piece (or done) are absent — they advance individually."""
         buckets: Dict = {}
         for pipe in self.members:
             ad = pipe.active_diag()
             if ad is None:
                 continue
             g, capture, xs, carry = ad
-            sig = (g, capture, pipe._groups_per_advance())
+            sig = (g, capture, pipe._stream, pipe._groups_per_advance())
             buckets.setdefault(sig, []).append((pipe, xs, carry))
         return buckets
 
@@ -1171,7 +1319,7 @@ class AdmissionPool:
             group = [g for g in group if id(g[0]) not in advanced]
             if len(group) < 2:
                 continue
-            g_segs, capture, k = sig
+            g_segs, capture, _stream, k = sig
             carries = self.engine.pool_prefill_step_run(
                 g_segs, capture, k, group)
             for (pipe, _, _), c in zip(group, carries):

@@ -199,7 +199,8 @@ class ContinuousScheduler:
                  prefill_groups_per_chunk: int = 4,
                  fused_admission: bool = False,
                  max_concurrent_admissions: Optional[int] = None,
-                 admission_fairness: str = "round_robin"):
+                 admission_fairness: str = "round_robin",
+                 admission_byte_budget: Optional[int] = None):
         from repro.models import decode_state_init
         from repro.serve.engine import AdmissionPool
         assert n_slots >= 1 and chunk >= 1
@@ -226,6 +227,12 @@ class ContinuousScheduler:
         # PR 5 single-admission behavior (and its exact compiled programs)
         self.max_concurrent_admissions = max_concurrent_admissions
         self.admission_fairness = admission_fairness
+        # overflow-aware admission (DESIGN.md §15): prompts whose full-ys
+        # prefill would exceed this many activation bytes go through the
+        # streaming carry with byte-bounded stages; None disables the check
+        assert admission_byte_budget is None or admission_byte_budget > 0, \
+            admission_byte_budget
+        self.admission_byte_budget = admission_byte_budget
         self._adms: List[_Admission] = []            # FIFO
         self._pool_adm = AdmissionPool(engine)
         # idle-drain observability: rounds run inside the tight loop that
@@ -303,6 +310,34 @@ class ContinuousScheduler:
                                 "engine has no session_store")
         return None
 
+    def _admission_plan(self, prompt_len: int):
+        """Byte-budget admission decision (DESIGN.md §15): returns
+        ``(stream, max_stage_segments)`` for a prompt of ``prompt_len``
+        tokens. Prompts whose full-``ys`` prefill fits the budget keep the
+        default path bit for bit; oversized prompts stream (rolling
+        win/brow carry) with stages capped so even the per-stage ``xs``
+        fits, and the decision is counted + the compiled stepper's
+        temp/peak bytes published as gauges. Host arithmetic only — no
+        device sync on the admit path."""
+        budget = self.admission_byte_budget
+        if budget is None:
+            return False, None
+        S = prompt_len // self.engine.seg_len
+        if S < 2 or self.engine.prefill_activation_bytes(
+                S, stream=False) <= budget:
+            return False, None
+        max_g = S
+        while max_g > 1 and self.engine.prefill_activation_bytes(
+                max_g, stream=True) > budget:
+            max_g //= 2
+        self.tel.inc("overflow_admissions_total")
+        self.tel.set_gauge("admission_stage_cap_segments", max_g)
+        k = self.prefill_groups_per_chunk
+        self.engine.prefill_memory_stats(
+            min(max_g, S), stream=True,
+            n_groups=(k if k and k > 0 else 4))
+        return True, (max_g if max_g < S else None)
+
     def _admit(self, req: Request, t_submit: float) -> Optional[RequestError]:
         """Prefill (or session-resume) the request alone and transplant it
         into a free slot; other slots keep decoding across this call.
@@ -338,10 +373,23 @@ class ContinuousScheduler:
                 logits, one_state, pos = self.engine._chunk(
                     dstate, jnp.asarray(toks_in[None]), entry.pos)
         else:
-            # diagonal prefill of the new request alone (longest-prefix
-            # cache hit inside _prefill when the engine carries one)
-            logits, one_state, pos, _cached = self.engine._prefill(
-                prompt[None])
+            stream, max_g = self._admission_plan(prompt.shape[0])
+            if stream:
+                # oversized prompt under the byte budget: drain a streaming
+                # resumable pipeline synchronously — blocking semantics,
+                # bounded memory (the full-ys _prefill would hold the whole
+                # O(S) activation set at once)
+                pipe = self.engine.start_prefill(
+                    prompt[None], groups_per_call=None, stream=True,
+                    max_stage_segments=max_g)
+                while not pipe.advance():
+                    pass
+                logits, one_state, pos, _cached = pipe.result()
+            else:
+                # diagonal prefill of the new request alone (longest-prefix
+                # cache hit inside _prefill when the engine carries one)
+                logits, one_state, pos, _cached = self.engine._prefill(
+                    prompt[None])
         self._install(slot, req, entry, prompt, logits, one_state, pos,
                       t_submit, t_admit, n_concurrent=1)
         return None
@@ -421,9 +469,11 @@ class ContinuousScheduler:
                 return RequestError(req.req_id, "session_evicted", str(e))
         slot = self.free.popleft()
         k = self.prefill_groups_per_chunk
+        stream, max_g = (self._admission_plan(prompt.shape[0])
+                         if entry is None else (False, None))
         pipe = self.engine.start_prefill(
             prompt[None], groups_per_call=(None if k < 0 else k),
-            session_entry=entry)
+            session_entry=entry, stream=stream, max_stage_segments=max_g)
         self._adms.append(_Admission(
             req=req, slot=slot, pipe=pipe, entry=entry, prompt=prompt,
             t_submit=t_submit, t_admit=t_admit,
@@ -456,10 +506,10 @@ class ContinuousScheduler:
         order = sorted(buckets.keys())        # deterministic compile key
         sigs, xs_b, carry_b, groups = [], [], [], []
         for sig in order:
-            g_segs, capture, k = sig
+            g_segs, capture, stream, k = sig
             group = buckets[sig]
             n_pool, xs_t, carry_t = self.engine.pool_pack(g_segs, group)
-            sigs.append((g_segs, capture, k, n_pool))
+            sigs.append((g_segs, capture, stream, k, n_pool))
             xs_b.append(xs_t)
             carry_b.append(carry_t)
             groups.append(group)
@@ -851,7 +901,9 @@ def fused_fns(engine, chunk: int, n_segments: int, capture: bool, k: int):
                            "pattern": params["pattern"]}
             carry = diag.pipeline_step(layout, exec_params, xs, carry,
                                        apply, n_groups=k, buf_spec=buf_spec,
-                                       grouped_apply=gapply)
+                                       grouped_apply=gapply,
+                                       remat=cfg.remat != "none",
+                                       retain_pos=engine.seg_len - 1)
         return state, tok, active, remaining, toks, masks, carry
 
     donate = (1, 2, 3, 4, 6) if jax.default_backend() != "cpu" else ()
@@ -866,8 +918,8 @@ def fused_pool_fns(engine, chunk: int, sigs: tuple):
     and N admissions alike, in a single dispatch (the N-carry
     generalization of ``fused_fns``).
 
-    ``sigs`` is the per-bucket signature tuple ``((n_segments, capture, k,
-    n_pool), ...)``; the program takes (and returns) one
+    ``sigs`` is the per-bucket signature tuple ``((n_segments, capture,
+    stream, k, n_pool), ...)``; the program takes (and returns) one
     ``(xs_tuple, carry_tuple)`` pair per bucket, each tuple pow2-padded to
     its ``n_pool`` (engine.pool_pack), so the compile count is bounded by
     the pow2 bucketing of both stage sizes and pool sizes times the few
@@ -881,7 +933,7 @@ def fused_pool_fns(engine, chunk: int, sigs: tuple):
     chunk_body = _chunk_body_factory(engine.cfg, engine.serve_mode,
                                      engine.seg_len, chunk)
     bodies = [engine._pool_step_body(g, 1, capture, k, n_pool)
-              for (g, capture, k, n_pool) in sigs]
+              for (g, capture, _stream, k, n_pool) in sigs]
 
     def fused(params, state, tok, active, remaining, xs_bkts, carry_bkts):
         with jax.named_scope("serve.fused_global_grid"):

@@ -1,0 +1,166 @@
+"""cfg.remat must actually reach the executors (DESIGN.md §15).
+
+The executor-level ``jax.checkpoint`` wrap (run_diagonal / pipeline_step)
+has always covered the vmap path; PR 10 threads ``remat`` into the fused
+grouped cell (``make_grouped_apply``) and the serve prefill stepper so the
+bounded-memory guarantee holds on every path. These are regression tests
+that the flag survives the plumbing: they walk the traced jaxpr (including
+pjit/scan/cond sub-jaxprs) for the checkpoint primitive instead of trusting
+the keyword to be forwarded.
+
+``jax.checkpoint`` only changes what the *backward* pass holds live;
+forward values must be bitwise unchanged — asserted here too, because the
+serving paths rely on remat being a free (exactness-neutral) default.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARMTConfig, get_smoke_config
+from repro.core import diagonal as diag
+from repro.core.schedule import StackLayout
+from repro.models import init_params
+from repro.models.grouped_blocks import make_grouped_apply
+from repro.models.model import embed_segments, init_state
+
+# the checkpoint primitive's registered name in current jax ("remat2"; the
+# original "remat" in very old releases) — match by prefix so either works
+_REMAT_PREFIX = "remat"
+
+
+def _subjaxprs(v):
+    if hasattr(v, "eqns"):          # raw Jaxpr
+        return [v]
+    if hasattr(v, "jaxpr"):         # ClosedJaxpr
+        return [v.jaxpr]
+    if isinstance(v, (list, tuple)):
+        out = []
+        for item in v:
+            out.extend(_subjaxprs(item))
+        return out
+    return []
+
+
+def count_remat(jaxpr) -> int:
+    """Occurrences of the checkpoint primitive anywhere in ``jaxpr``,
+    recursing through every sub-jaxpr carried in equation params (pjit
+    bodies, scan/while bodies, cond branches, custom_vjp calls)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name.startswith(_REMAT_PREFIX):
+            n += 1
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                n += count_remat(sub)
+    return n
+
+
+def _cfg(**kw):
+    base = dataclasses.replace(
+        get_smoke_config("llama-1b-armt"), n_layers=4, d_model=32, n_heads=2,
+        n_kv_heads=2, d_head=16, d_ff=64, max_position=4096, dtype="float32",
+        armt=ARMTConfig(segment_len=16, num_mem_tokens=4, d_mem=8))
+    return dataclasses.replace(base, **kw) if kw else base
+
+
+def _stacked_inputs(cfg, B=2):
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    p0 = params["pattern"][0]
+    G = cfg.n_layers
+    T = cfg.armt.segment_len + cfg.armt.num_mem_tokens
+    x = jax.random.normal(jax.random.PRNGKey(1), (G, B, T, cfg.d_model),
+                          jnp.float32)
+    st = init_state(cfg, B, "segmented", jnp.float32)["pattern"][0]
+    return params, p0, x, st
+
+
+def test_fused_grouped_cell_remat():
+    """make_grouped_apply(remat=True) wraps the fused attn cell in
+    jax.checkpoint; remat=False compiles checkpoint-free; forward values
+    are bitwise identical either way."""
+    cfg = _cfg()
+    _, p0, x, st = _stacked_inputs(cfg)
+    outs = {}
+    for remat in (False, True):
+        ga = make_grouped_apply(cfg, mode="segmented", ssm_method="assoc",
+                                remat=remat)
+        jaxpr = jax.make_jaxpr(lambda p, h, s: ga("attn", p, h, s))(p0, x, st)
+        n = count_remat(jaxpr.jaxpr)
+        assert (n > 0) == remat, (remat, n)
+        outs[remat] = ga("attn", p0, x, st)
+    y0, st0 = outs[False]
+    y1, st1 = outs[True]
+    assert (y0 == y1).all()
+    for a, b in zip(jax.tree_util.tree_leaves(st0),
+                    jax.tree_util.tree_leaves(st1)):
+        assert (a == b).all()
+
+
+def test_blockwise_cell_remats_per_block():
+    """cell_block > 0 adds the per-chunk checkpoint inside the blockwise
+    FFN even when the outer cell-level remat is off."""
+    cfg = _cfg(cell_block=8)
+    _, p0, x, st = _stacked_inputs(cfg)
+    ga = make_grouped_apply(cfg, mode="segmented", ssm_method="assoc",
+                            remat=False)
+    jaxpr = jax.make_jaxpr(lambda p, h, s: ga("attn", p, h, s))(p0, x, st)
+    assert count_remat(jaxpr.jaxpr) > 0
+
+
+@pytest.mark.parametrize("grouped_impl", ["vmap", "fused"])
+def test_prefill_stepper_remat(grouped_impl):
+    """The serve prefill stepper (ServeEngine.prefill_step ->
+    diag.pipeline_step) recompiles with checkpoint active iff cfg.remat is
+    on; the fused engine additionally carries the cell-level checkpoint."""
+    from repro.serve.engine import ServeEngine
+
+    counts = {}
+    for remat_mode in ("none", "full"):
+        cfg = _cfg(remat=remat_mode, grouped_impl=grouped_impl)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(params, cfg)
+        step = eng.prefill_step(4, 1, False, 2)
+        stats = eng.prefill_memory_stats(4, stream=True, n_groups=2)
+        assert stats["temp_bytes"] is not None
+        xs_abs, carry_abs = jax.eval_shape(
+            lambda x: diag.pipeline_init(
+                StackLayout.from_config(cfg),
+                init_state(cfg, 1, "segmented", jnp.float32), x),
+            jax.ShapeDtypeStruct((4, 1, eng.seg_len
+                                  + cfg.armt.num_mem_tokens, cfg.d_model),
+                                 jnp.float32))
+        jaxpr = jax.make_jaxpr(step)(params, xs_abs, carry_abs)
+        counts[remat_mode] = count_remat(jaxpr.jaxpr)
+    assert counts["none"] == 0, counts
+    assert counts["full"] > 0, counts
+
+
+def test_run_diagonal_remat_forward_neutral():
+    """Executor-level remat on run_diagonal: checkpoint shows up in the
+    trace and the forward outputs (ys + final state) stay bitwise equal."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    layout = StackLayout.from_config(cfg)
+    B, S = 1, 3
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S * 16), 0,
+                                cfg.vocab)
+    segs = embed_segments(params, cfg, tokens, 16, True)
+    state0 = init_state(cfg, B, "segmented", segs.dtype)
+    exec_params = {"prelude": params.get("prelude", ()),
+                   "pattern": params["pattern"]}
+    from repro.models.blocks import make_apply_block
+    apply = make_apply_block(cfg, mode="segmented", ssm_method="assoc")
+
+    def run(remat):
+        return diag.run_diagonal(layout, exec_params, state0, segs, apply,
+                                 remat=remat)
+    jaxpr = jax.make_jaxpr(lambda: run(True))()
+    assert count_remat(jaxpr.jaxpr) > 0
+    ys0, st0 = run(False)
+    ys1, st1 = run(True)
+    assert (ys0 == ys1).all()
+    for a, b in zip(jax.tree_util.tree_leaves(st0),
+                    jax.tree_util.tree_leaves(st1)):
+        assert (a == b).all()

@@ -309,8 +309,8 @@ def test_pool_carries_never_alias(setup):
 
     # first pooled round: 3 members -> pow2 pool of 4 (one pad exercised)
     buckets = pool.diag_buckets()
-    assert list(buckets) == [(2, True, 1)]
-    in_carries = [c for _, _, c in buckets[(2, True, 1)]]
+    assert list(buckets) == [(2, True, False, 1)]
+    in_carries = [c for _, _, c in buckets[(2, True, False, 1)]]
     in_ptrs = set().union(*[_leaf_ptrs(c) for c in in_carries])
     done = pool.advance_round()
     assert done == []
